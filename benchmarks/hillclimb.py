@@ -1,0 +1,87 @@
+"""§Perf hillclimb harness: run a named sequence of configuration changes on
+one (arch × shape) and record the roofline deltas per iteration.
+
+Each experiment is (label, kwargs-for-lower_one). The paper-faithful
+baseline (FSDP + TP, full remat, no microbatching) comes first; subsequent
+entries are the beyond-paper candidates. Output: JSON list of records to
+results/hillclimb_<arch>_<shape>.json plus a printed before/after table.
+
+Run: PYTHONPATH=src python -m benchmarks.hillclimb --pair mistral-train
+"""
+import argparse
+import json
+import os
+
+PAIRS = {
+    # worst roofline fraction: memory+collective dominated 123B dense train
+    "mistral-train": ("mistral-large-123b", "train_4k", [
+        ("baseline (paper-faithful FSDP+TP)", {}),
+        ("B1 microbatch=4", {"microbatch": 4}),
+        ("B2 seq-parallel residual", {"seq_parallel": True}),
+        ("B3 seq-parallel + microbatch=4",
+         {"seq_parallel": True, "microbatch": 4}),
+        ("B4 remat=dots (recompute fewer matmuls)",
+         {"remat": "dots", "seq_parallel": True, "microbatch": 4}),
+        ("B5 seq-parallel + microbatch=8",
+         {"seq_parallel": True, "microbatch": 8}),
+    ]),
+    # most collective-bound: MoE+MLA decode with FSDP weight gathers
+    "dsv2-decode": ("deepseek-v2-lite-16b", "decode_32k", [
+        ("baseline (FSDP+TP serve)", {}),
+        ("D1 TP-only weights (no FSDP gathers at decode)", {"fsdp": False}),
+    ]),
+    # most representative of the paper's technique: elastic MoE training
+    "qwen2moe-train": ("qwen2-moe-a2.7b", "train_4k", [
+        ("baseline (paper-faithful FSDP+TP+EP)", {}),
+        ("Q1 seq-parallel residual", {"seq_parallel": True}),
+        ("Q2 seq-parallel + microbatch=4",
+         {"seq_parallel": True, "microbatch": 4}),
+        ("Q3 microbatch=4 only", {"microbatch": 4}),
+    ]),
+    # bonus: pad-head waste (whisper 8 heads on a 16-way axis)
+    "whisper-train": ("whisper-base", "train_4k", [
+        ("baseline (padded heads 8->16)", {}),
+        ("W1 seq-sharded attention (no pad heads)",
+         {"cfg_overrides": {"attn_seq_shard": True}}),
+    ]),
+}
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--pair", choices=sorted(PAIRS), required=True)
+    ap.add_argument("--out", default="results")
+    args = ap.parse_args()
+
+    from repro.launch.dryrun import lower_one
+
+    arch, shape, experiments = PAIRS[args.pair]
+    records = []
+    for label, kw in experiments:
+        print(f"\n### {label} ###")
+        try:
+            rec = lower_one(arch, shape, **kw)
+            rec["label"] = label
+        except Exception as e:  # noqa: BLE001
+            import traceback
+            traceback.print_exc()
+            rec = {"label": label, "error": str(e)[:500]}
+        records.append(rec)
+        path = os.path.join(args.out, f"hillclimb_{args.pair}.json")
+        with open(path, "w") as f:
+            json.dump(records, f, indent=1, default=str)
+
+    print(f"\n{'label':45s} {'t_comp':>9s} {'t_mem':>9s} {'t_coll':>9s} "
+          f"{'peak/dev':>10s} {'useful':>7s}")
+    for r in records:
+        if "error" in r:
+            print(f"{r['label']:45s} ERROR {r['error'][:60]}")
+            continue
+        print(f"{r['label']:45s} {r['t_compute_s']:9.2f} "
+              f"{r['t_memory_s']:9.2f} {r['t_collective_s']:9.2f} "
+              f"{(r['peak_bytes_per_device'] or 0) / 2 ** 30:9.1f}G "
+              f"{r['useful_flops_ratio']:7.2f}")
+
+
+if __name__ == "__main__":
+    main()

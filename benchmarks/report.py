@@ -1,0 +1,79 @@
+"""Generate the EXPERIMENTS.md §Dry-run and §Roofline tables from the
+dry-run JSON dumps.
+
+Run: PYTHONPATH=src python -m benchmarks.report [--json results/...json]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+
+
+def fmt_bytes(b):
+    if b is None:
+        return "-"
+    for unit in ("B", "KB", "MB", "GB", "TB"):
+        if abs(b) < 1024:
+            return f"{b:.1f}{unit}"
+        b /= 1024
+    return f"{b:.1f}PB"
+
+
+def fmt_s(x):
+    if x >= 1:
+        return f"{x:.2f}s"
+    if x >= 1e-3:
+        return f"{x * 1e3:.2f}ms"
+    return f"{x * 1e6:.1f}us"
+
+
+def roofline_table(results):
+    hdr = ("| arch | shape | t_compute | t_memory | t_collective | dominant "
+           "| MODEL/HLO flops | peak mem/dev | collectives |")
+    sep = "|" + "---|" * 9
+    lines = [hdr, sep]
+    for r in sorted(results, key=lambda r: (r["arch"], r["shape"])):
+        colls = ",".join(f"{k}:{fmt_bytes(v)}"
+                         for k, v in sorted(r.get("collectives",
+                                                  {}).items()))
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {fmt_s(r['t_compute_s'])} "
+            f"| {fmt_s(r['t_memory_s'])} | {fmt_s(r['t_collective_s'])} "
+            f"| **{r['dominant']}** | {r['useful_flops_ratio']:.2f} "
+            f"| {fmt_bytes(r['peak_bytes_per_device'])} | {colls} |")
+    return "\n".join(lines)
+
+
+def dryrun_table(results):
+    hdr = ("| arch | shape | mesh | flops/dev | bytes/dev | coll bytes/dev "
+           "| args/dev | temp/dev | compile |")
+    sep = "|" + "---|" * 9
+    lines = [hdr, sep]
+    for r in sorted(results, key=lambda r: (r["arch"], r["shape"])):
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {r['mesh']} "
+            f"| {r['flops_per_device']:.2e} | {r['bytes_per_device']:.2e} "
+            f"| {fmt_bytes(r['collective_bytes_per_device'])} "
+            f"| {fmt_bytes(r['arg_bytes_per_device'])} "
+            f"| {fmt_bytes(r['temp_bytes_per_device'])} "
+            f"| {r['compile_s']}s |")
+    return "\n".join(lines)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--json", default="results/dryrun_singlepod.json")
+    ap.add_argument("--kind", choices=["roofline", "dryrun"],
+                    default="roofline")
+    args = ap.parse_args()
+    with open(args.json) as f:
+        data = json.load(f)
+    results = data["results"]
+    print(roofline_table(results) if args.kind == "roofline"
+          else dryrun_table(results))
+    if data.get("failures"):
+        print("\nFAILURES:", json.dumps(data["failures"], indent=1))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,60 @@
+"""Elastic synchronous SGD — the paper's technique as a runtime mechanism.
+
+The global batch is partitioned into ``n_workers`` contiguous worker slices
+(on hardware: slices of the data mesh axes). Each step takes an
+``active_mask ∈ {0,1}^{n_workers}``; the gradient is the masked, renormalized
+mean — exactly Eq. (5) with y_j = Σ mask: preempted workers contribute zero
+and the sum is divided by the *active* example count. Fully pjit-native: the
+mask enters via per-example loss weights, so no resharding happens on
+preemption events.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def example_weights(active_mask: jax.Array, batch_size: int) -> jax.Array:
+    """Per-example weights implementing the masked worker average.
+
+    active_mask: (n_workers,) float {0,1}. Returns (batch_size,) weights w
+    with w_e = mask[worker(e)] and worker(e) = e // (B/n_workers). The loss
+    normalizer divides by Σ w (see ``weighted_mean``), so together this is
+    (1/y_j)·Σ_{active} g^{(i)} — Eq. (5) with y_j active workers.
+    """
+    n_workers = active_mask.shape[0]
+    assert batch_size % n_workers == 0, (batch_size, n_workers)
+    per = batch_size // n_workers
+    return jnp.repeat(active_mask.astype(jnp.float32), per,
+                      total_repeat_length=batch_size)
+
+
+def weighted_mean(values: jax.Array, weights: jax.Array) -> jax.Array:
+    """Σ w·v / Σ w with a guard for the all-preempted case (y_j = 0 steps are
+    idle time — the trainer skips them, but the guard keeps jit total)."""
+    denom = jnp.maximum(weights.sum(), 1e-9)
+    return (values * weights).sum() / denom
+
+
+def active_fraction(active_mask: jax.Array) -> jax.Array:
+    return active_mask.mean()
+
+
+def worker_of_example(batch_size: int, n_workers: int) -> np.ndarray:
+    return np.arange(batch_size) // (batch_size // n_workers)
+
+
+def mask_from_active_count(n_workers: int, y: int) -> np.ndarray:
+    """First-y-active mask (used by simulators that only track counts)."""
+    m = np.zeros(n_workers, np.float32)
+    m[:y] = 1.0
+    return m
+
+
+def mask_from_bids(bids: np.ndarray, price: float) -> np.ndarray:
+    """Spot semantics: a worker is active iff its bid ≥ the prevailing
+    price."""
+    return (np.asarray(bids) >= price).astype(np.float32)

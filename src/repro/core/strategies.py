@@ -1,0 +1,142 @@
+"""Job-level strategies evaluated in the paper's experiments (§VI):
+
+* ``NoInterruptions`` — bid above the max price ([14]'s recommendation).
+* ``OptimalOneBid``  — Theorem 2.
+* ``OptimalTwoBids`` — Theorem 3.
+* ``DynamicBids``    — re-optimize the two bids when adding workers mid-job
+  (§VI "Dynamic strategy": subtract consumed time from θ, remaining J).
+* ``StaticWorkers`` / ``DynamicWorkers`` — §V provisioning (Theorem 4 / 5)
+  for preemptible instances without bids.
+
+Each strategy exposes ``plan(t_elapsed, j_done)`` → (bids | worker count)
+so the trainer can consult it every iteration.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional, Tuple
+
+import numpy as np
+
+from repro.core import bidding, convergence as conv, provisioning
+from repro.core.cost_model import PriceDist, RuntimeModel
+
+
+class Strategy:
+    name: str = "base"
+
+    def bids(self, t_elapsed: float, j_done: int) -> np.ndarray:
+        raise NotImplementedError
+
+    def workers(self, j: int) -> int:
+        """Provisioned workers at iteration j (preemptible-instance mode)."""
+        raise NotImplementedError
+
+    @property
+    def total_iterations(self) -> int:
+        raise NotImplementedError
+
+
+@dataclasses.dataclass
+class FixedBids(Strategy):
+    plan_: bidding.BidPlan
+    name: str = "fixed"
+
+    def bids(self, t_elapsed, j_done):
+        return self.plan_.bids
+
+    @property
+    def total_iterations(self):
+        return self.plan_.J
+
+
+def no_interruptions(prob, eps, n, dist, rt) -> FixedBids:
+    return FixedBids(bidding.no_interruption_bid(prob, eps, n, dist, rt),
+                     name="no-interruptions")
+
+
+def optimal_one_bid(prob, eps, theta, n, dist, rt) -> FixedBids:
+    return FixedBids(bidding.optimal_uniform_bid(prob, eps, theta, n, dist,
+                                                 rt), name="optimal-one-bid")
+
+
+def optimal_two_bids(prob, eps, theta, n, dist, rt, n1=None) -> FixedBids:
+    return FixedBids(bidding.co_optimize_two_bids(prob, eps, theta, n, dist,
+                                                  rt, n1=n1),
+                     name="optimal-two-bids")
+
+
+@dataclasses.dataclass
+class DynamicBids(Strategy):
+    """§VI Dynamic strategy: start with (n1, n) workers and optimal two bids;
+    at iteration ``switch_at`` add workers (n1', n') and re-optimize the bids
+    with the remaining deadline and iterations."""
+
+    prob: conv.SGDProblem
+    eps: float
+    theta: float
+    dist: PriceDist
+    rt: RuntimeModel
+    stage1: Tuple[int, int]            # (n1, n)
+    stage2: Tuple[int, int]
+    switch_at: int
+    name: str = "dynamic-bids"
+
+    def __post_init__(self):
+        n1, n = self.stage1
+        self._plan1 = bidding.co_optimize_two_bids(
+            self.prob, self.eps, self.theta, n, self.dist, self.rt, n1=n1)
+        self._plan2: Optional[bidding.BidPlan] = None
+
+    @property
+    def total_iterations(self):
+        return self._plan1.J
+
+    def bids(self, t_elapsed, j_done):
+        if j_done < self.switch_at:
+            return self._plan1.bids
+        if self._plan2 is None:
+            n1p, np_ = self.stage2
+            theta_left = max(self.theta - t_elapsed, 1e-6)
+            j_left = max(self._plan1.J - j_done, 1)
+            # re-optimize bids for the enlarged fleet on the remaining budget
+            try:
+                self._plan2 = bidding.optimal_two_bids(
+                    self.prob, self.eps, theta_left, n1p, np_, j_left,
+                    self.dist, self.rt)
+            except ValueError:
+                self._plan2 = bidding.no_interruption_bid(
+                    self.prob, self.eps, np_, self.dist, self.rt)
+        return self._plan2.bids
+
+
+@dataclasses.dataclass
+class StaticWorkers(Strategy):
+    """Theorem 4 provisioning: fixed n for J iterations."""
+
+    plan_: provisioning.ProvisionPlan
+    name: str = "static-n"
+
+    def workers(self, j):
+        return self.plan_.n
+
+    @property
+    def total_iterations(self):
+        return self.plan_.J
+
+
+@dataclasses.dataclass
+class DynamicWorkers(Strategy):
+    """Theorem 5: n_j = ⌈n0 η^{j−1}⌉ for the log-shortened horizon."""
+
+    n0: int
+    eta: float
+    J: int
+    name: str = "dynamic-n"
+
+    def workers(self, j):
+        return int(np.ceil(self.n0 * self.eta ** j))
+
+    @property
+    def total_iterations(self):
+        return self.J

@@ -1,0 +1,66 @@
+"""Jit'd public wrappers around the Pallas kernels, with layout conversion
+from the model-native (B, S, H, D) and the full SSD-with-recurrence glue."""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention import flash_attention
+from repro.kernels.ssd_scan import ssd_chunk_pallas
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "window", "q_offset",
+                                             "interpret"))
+def flash_mha(q, k, v, *, causal: bool = True, window: Optional[int] = None,
+              q_offset: int = 0, interpret: Optional[bool] = None):
+    """Model-layout wrapper: q (B,S,H,D), k/v (B,T,Hkv,D) -> (B,S,H,D)."""
+    qt = q.transpose(0, 2, 1, 3)
+    kt = k.transpose(0, 2, 1, 3)
+    vt = v.transpose(0, 2, 1, 3)
+    out = flash_attention(qt, kt, vt, causal=causal, window=window,
+                          q_offset=q_offset, interpret=interpret)
+    return out.transpose(0, 2, 1, 3)
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def ssd_chunked_pallas(xh, dt, a_h, bm, cm, *, chunk: int = 256,
+                       interpret: Optional[bool] = None
+                       ) -> Tuple[jax.Array, jax.Array]:
+    """Full SSD via the Pallas intra-chunk kernel + jnp inter-chunk scan.
+    Mirrors models.ssm.ssd_chunked: returns (y (B,S,H,P), final state
+    (B,H,P,N) fp32)."""
+    b, s, h, p = xh.shape
+    g, n = bm.shape[2], bm.shape[3]
+    q = min(chunk, s)
+    nc = s // q
+    rep = h // g
+
+    y_intra, states, cs, cdecay = ssd_chunk_pallas(
+        xh, dt, a_h, bm, cm, chunk=q, interpret=interpret)
+    # states: (B, nc, H, N, P) contribution of each chunk's inputs;
+    # recurrence h_c = cdecay_c · h_{c-1} + states_c
+    h0 = jnp.zeros((b, h, n, p), jnp.float32)
+
+    def step(hprev, inp):
+        dec, st = inp
+        return hprev * dec[..., None, None] + st, hprev
+
+    _, hprevs = jax.lax.scan(
+        step, h0, (jnp.moveaxis(cdecay, 1, 0), jnp.moveaxis(states, 1, 0)))
+    hprevs = jnp.moveaxis(hprevs, 0, 1)                  # (B, nc, H, N, P)
+
+    # y_inter[i] = C_i · h_prev · exp(cs_i)
+    cm_h = jnp.repeat(cm, rep, axis=2)                   # (B, S, H, N)
+    cm_c = cm_h.reshape(b, nc, q, h, n).astype(jnp.float32)
+    y_inter = jnp.einsum("bcqhn,bchnp,bchq->bcqhp", cm_c, hprevs,
+                         jnp.exp(cs))
+    y = y_intra + y_inter.reshape(b, s, h, p).astype(xh.dtype)
+
+    hfin, _ = step(
+        jnp.moveaxis(hprevs, 1, 0)[-1],
+        (cdecay[:, -1], states[:, -1]))
+    # transpose final state to the model's (B, H, P, N) convention
+    return y, hfin.transpose(0, 1, 3, 2)

@@ -1,0 +1,66 @@
+"""Pure-jnp oracles for the Pallas kernels (the allclose targets for the
+shape/dtype sweep tests)."""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def mha_reference(q, k, v, *, causal: bool = True,
+                  window: Optional[int] = None, q_offset: int = 0
+                  ) -> jax.Array:
+    """Dense softmax attention. q: (B,H,S,D); k/v: (B,Hkv,T,D)."""
+    b, h, s, d = q.shape
+    hkv, t = k.shape[1], k.shape[2]
+    g = h // hkv
+    if g > 1:
+        k = jnp.repeat(k, g, axis=1)
+        v = jnp.repeat(v, g, axis=1)
+    scores = jnp.einsum("bhsd,bhtd->bhst", q.astype(jnp.float32),
+                        k.astype(jnp.float32)) * d ** -0.5
+    qpos = jnp.arange(s)[:, None] + q_offset
+    kpos = jnp.arange(t)[None, :]
+    mask = jnp.ones((s, t), bool)
+    if causal:
+        mask &= kpos <= qpos
+    if window is not None:
+        mask &= qpos - kpos < window
+    scores = jnp.where(mask, scores, NEG_INF)
+    p = jax.nn.softmax(scores, axis=-1)
+    return jnp.einsum("bhst,bhtd->bhsd", p,
+                      v.astype(jnp.float32)).astype(q.dtype)
+
+
+def ssd_reference(xh, dt, a_h, bm, cm):
+    """Naive per-token SSD recurrence (the semantic ground truth).
+
+    xh: (B,S,H,P), dt: (B,S,H), a_h: (H,), bm/cm: (B,S,G,N).
+    h_t = exp(dt_t·a)·h_{t−1} + dt_t·B_t⊗x_t ;  y_t = C_t·h_t.
+    Returns (y (B,S,H,P), final state (B,H,P,N))."""
+    b, s, h, p = xh.shape
+    g, n = bm.shape[2], bm.shape[3]
+    rep = h // g
+    bmh = jnp.repeat(bm, rep, axis=2).astype(jnp.float32)   # (B,S,H,N)
+    cmh = jnp.repeat(cm, rep, axis=2).astype(jnp.float32)
+    x = xh.astype(jnp.float32)
+    dt = dt.astype(jnp.float32)
+    a_h = a_h.astype(jnp.float32)
+
+    def step(hprev, inp):
+        x_t, dt_t, b_t, c_t = inp                            # (B,H,P) ...
+        da = jnp.exp(dt_t * a_h)                             # (B,H)
+        hnew = (hprev * da[..., None, None]
+                + dt_t[..., None, None] * x_t[..., None] * b_t[:, :, None, :])
+        y_t = jnp.einsum("bhpn,bhn->bhp", hnew, c_t)
+        return hnew, y_t
+
+    h0 = jnp.zeros((b, h, p, n), jnp.float32)
+    hfin, ys = jax.lax.scan(
+        step, h0,
+        (jnp.moveaxis(x, 1, 0), jnp.moveaxis(dt, 1, 0),
+         jnp.moveaxis(bmh, 1, 0), jnp.moveaxis(cmh, 1, 0)))
+    return jnp.moveaxis(ys, 0, 1).astype(xh.dtype), hfin

@@ -1,0 +1,129 @@
+"""Mamba2 SSD chunk kernel (Pallas, TPU target).
+
+The O(Q²) intra-chunk work — the compute hot spot of SSD training/prefill —
+runs per (batch, head, chunk) grid cell entirely in VMEM:
+
+  decay   = exp(segsum(a))           (Q, Q) lower-triangular
+  y_intra = (C·Bᵀ ⊙ decay·dt) · x    two MXU matmuls
+  state   = (exp(cs_last − cs)·dt·x)ᵀ · B   chunk-final state contribution
+  csum    = cumsum(a) within the chunk (for the inter-chunk correction)
+
+The sequential inter-chunk recurrence (h_c = decay_c·h_{c−1} + state_c) and
+the y_inter = C·h_prev·exp(cs) correction are cheap O(Q·P·N) jnp outside the
+kernel (ops.py). VMEM per cell ≈ Q² + 2·Q·N + 2·Q·P + P·N floats ≈ 0.5 MB at
+(Q,P,N) = (256,64,128); all matmul dims are 128-multiples (Q=256, N=128) or
+the packed-lane 64 (P) — MXU-friendly.
+
+Validated with interpret=True against ref.ssd_reference (naive per-token
+recurrence).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+try:
+    from jax.experimental.pallas import tpu as pltpu
+    _VMEM = pltpu.VMEM
+except Exception:  # pragma: no cover
+    _VMEM = None
+
+
+def _ssd_chunk_kernel(x_ref, dt_ref, a_ref, b_ref, c_ref,
+                      y_ref, state_ref, cs_ref, cdecay_ref):
+    """Grid: (B, H, nc). Blocks: x (Q,P), dt (Q,), a scalar per head,
+    b/c (Q,N) (group-mapped in the index_map)."""
+    x = x_ref[0, 0, 0].astype(jnp.float32)               # (Q, P)
+    dt = dt_ref[0, 0, 0].astype(jnp.float32)             # (Q,)
+    a_h = a_ref[0].astype(jnp.float32)                   # ()
+    bm = b_ref[0, 0, 0].astype(jnp.float32)              # (Q, N)
+    cm = c_ref[0, 0, 0].astype(jnp.float32)              # (Q, N)
+    q = x.shape[0]
+
+    a = dt * a_h                                         # (Q,) ≤ 0
+    cs = jnp.cumsum(a)                                   # (Q,)
+    seg = cs[:, None] - cs[None, :]                      # cs_i − cs_j
+    tri = jax.lax.broadcasted_iota(jnp.int32, (q, q), 0) >= \
+        jax.lax.broadcasted_iota(jnp.int32, (q, q), 1)
+    decay = jnp.where(tri, jnp.exp(jnp.where(tri, seg, 0.0)), 0.0)
+
+    scores = jax.lax.dot_general(cm, bm, (((1,), (1,)), ((), ())),
+                                 preferred_element_type=jnp.float32)
+    w = scores * decay * dt[None, :]                     # (Q_i, Q_j)
+    y = jax.lax.dot_general(w, x, (((1,), (0,)), ((), ())),
+                            preferred_element_type=jnp.float32)
+
+    last = cs[-1]
+    wstate = jnp.exp(last - cs) * dt                     # (Q,)
+    state = jax.lax.dot_general(bm * wstate[:, None], x,
+                                (((0,), (0,)), ((), ())),
+                                preferred_element_type=jnp.float32)  # (N, P)
+
+    y_ref[0, 0, 0] = y.astype(y_ref.dtype)
+    state_ref[0, 0, 0] = state
+    cs_ref[0, 0, 0] = cs
+    cdecay_ref[0, 0, 0] = jnp.exp(last)[None]
+
+
+def ssd_chunk_pallas(xh, dt, a_h, bm, cm, *, chunk: int,
+                     interpret=None) -> Tuple[jax.Array, ...]:
+    """Intra-chunk SSD terms.
+
+    xh: (B, S, H, P); dt: (B, S, H) (post-softplus); a_h: (H,) negative;
+    bm/cm: (B, S, G, N). Returns (y_intra (B,S,H,P), states (B,nc,H,N,P),
+    cs (B,nc,H,Q), chunk_decay (B,nc,H)).
+    """
+    b, s, h, p = xh.shape
+    g, n = bm.shape[2], bm.shape[3]
+    q = min(chunk, s)
+    assert s % q == 0
+    nc = s // q
+    rep = h // g
+    if interpret is None:
+        interpret = jax.default_backend() == "cpu"
+
+    # layout: (B, H, nc, Q, ...) so the grid walks contiguous blocks
+    x_l = xh.transpose(0, 2, 1, 3).reshape(b, h, nc, q, p)
+    dt_l = dt.transpose(0, 2, 1).reshape(b, h, nc, q)
+    b_l = bm.transpose(0, 2, 1, 3).reshape(b, g, nc, q, n)
+    c_l = cm.transpose(0, 2, 1, 3).reshape(b, g, nc, q, n)
+
+    grid = (b, h, nc)
+    kernel = _ssd_chunk_kernel
+
+    y, states, cs, cdecay = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, 1, q, p), lambda b_, h_, c_: (b_, h_, c_, 0, 0)),
+            pl.BlockSpec((1, 1, 1, q), lambda b_, h_, c_: (b_, h_, c_, 0)),
+            pl.BlockSpec((1,), lambda b_, h_, c_: (h_,)),
+            pl.BlockSpec((1, 1, 1, q, n),
+                         lambda b_, h_, c_, r=rep: (b_, h_ // r, c_, 0, 0)),
+            pl.BlockSpec((1, 1, 1, q, n),
+                         lambda b_, h_, c_, r=rep: (b_, h_ // r, c_, 0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, 1, q, p), lambda b_, h_, c_: (b_, h_, c_, 0, 0)),
+            pl.BlockSpec((1, 1, 1, n, p), lambda b_, h_, c_: (b_, h_, c_, 0, 0)),
+            pl.BlockSpec((1, 1, 1, q), lambda b_, h_, c_: (b_, h_, c_, 0)),
+            pl.BlockSpec((1, 1, 1, 1), lambda b_, h_, c_: (b_, h_, c_, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((b, h, nc, q, p), xh.dtype),
+            jax.ShapeDtypeStruct((b, h, nc, n, p), jnp.float32),
+            jax.ShapeDtypeStruct((b, h, nc, q), jnp.float32),
+            jax.ShapeDtypeStruct((b, h, nc, 1), jnp.float32),
+        ],
+        interpret=interpret,
+    )(x_l, dt_l, a_h, b_l, c_l)
+
+    y_intra = y.reshape(b, h, s, p).transpose(0, 2, 1, 3)
+    states = states.transpose(0, 2, 1, 3, 4)             # (B, nc, H, N, P)
+    cs = cs.transpose(0, 2, 1, 3)                        # (B, nc, H, Q)
+    cdecay = cdecay[..., 0].transpose(0, 2, 1)           # (B, nc, H)
+    return y_intra, states, cs, cdecay

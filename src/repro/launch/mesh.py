@@ -1,0 +1,24 @@
+"""Production mesh construction. A FUNCTION (not a module-level constant) so
+importing this module never touches jax device state."""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """16×16 = 256 chips per pod; multi_pod adds a leading 2-pod axis
+    (512 chips). Axes: ("data", "model") / ("pod", "data", "model")."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh():
+    """Single-device mesh for CPU tests (1×1)."""
+    return jax.make_mesh((1, 1), ("data", "model"))
+
+
+def data_parallel_workers(mesh) -> int:
+    """Number of elastic worker slices = product of the batch axes."""
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    return sizes.get("pod", 1) * sizes.get("data", 1)

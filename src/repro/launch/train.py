@@ -1,0 +1,113 @@
+"""Training launcher.
+
+Two modes:
+* --local  : run a real (reduced-config) elastic training job on the current
+  devices with the simulated spot market — the full paper pipeline
+  (strategy → bids → preemptions → masked SGD → cost accounting).
+* default  : build the production-mesh job and print the lowered/compiled
+  step (delegates to dryrun for the compile; actual pod execution uses the
+  same code path on real hardware).
+
+Examples:
+  PYTHONPATH=src python -m repro.launch.train --arch qwen2-7b --local \
+      --strategy optimal-two-bids --iterations 50
+"""
+from __future__ import annotations
+
+import argparse
+import json
+
+import numpy as np
+
+from repro.configs import ARCHS, SHAPES, get_config
+from repro.configs.base import InputShape, JobConfig
+from repro.core import convergence as conv
+from repro.core import strategies as strat
+from repro.core.cost_model import RuntimeModel, TruncGaussianPrice, UniformPrice
+from repro.sim.cluster import VolatileCluster
+from repro.sim.spot_market import IIDPrices, SpotMarket, TracePrices, \
+    synthetic_history
+
+
+def default_problem() -> conv.SGDProblem:
+    """A conservative constant set for LM fine-tuning-scale jobs; examples
+    calibrate these from the quadratic oracle or short probe runs."""
+    return conv.SGDProblem(alpha=0.05, c=1.0, mu=1.0, L=4.0, M=8.0, G0=10.0)
+
+
+def build_strategy(name, prob, eps, theta, n, dist, rt):
+    if name == "no-interruptions":
+        return strat.no_interruptions(prob, eps, n, dist, rt)
+    if name == "optimal-one-bid":
+        return strat.optimal_one_bid(prob, eps, theta, n, dist, rt)
+    if name == "optimal-two-bids":
+        return strat.optimal_two_bids(prob, eps, theta, n, dist, rt)
+    if name == "dynamic-bids":
+        return strat.DynamicBids(prob, eps, theta, dist, rt,
+                                 stage1=(n // 4, n // 2), stage2=(n // 2, n),
+                                 switch_at=max(1, int(0.4 * strat.optimal_two_bids(
+                                     prob, eps, theta, n // 2, dist, rt
+                                 ).total_iterations)))
+    raise ValueError(name)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=sorted(ARCHS), default="qwen2-7b")
+    ap.add_argument("--shape", choices=sorted(SHAPES), default="train_4k")
+    ap.add_argument("--local", action="store_true",
+                    help="reduced config + simulated market on this host")
+    ap.add_argument("--strategy", default="optimal-two-bids",
+                    choices=["no-interruptions", "optimal-one-bid",
+                             "optimal-two-bids", "dynamic-bids"])
+    ap.add_argument("--price", default="uniform",
+                    choices=["uniform", "gaussian", "trace"])
+    ap.add_argument("--eps", type=float, default=0.5)
+    ap.add_argument("--theta", type=float, default=400.0)
+    ap.add_argument("--workers", type=int, default=8)
+    ap.add_argument("--iterations", type=int, default=None)
+    ap.add_argument("--batch", type=int, default=32)
+    ap.add_argument("--seq", type=int, default=64)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    if not args.local:
+        from repro.launch.dryrun import lower_one
+        rec = lower_one(args.arch, args.shape)
+        print(json.dumps({k: v for k, v in rec.items() if k != "collectives"},
+                         default=str, indent=1))
+        return
+
+    cfg = get_config(args.arch).reduced()
+    shape = InputShape("local", seq_len=args.seq, global_batch=args.batch,
+                       kind="train")
+    job = JobConfig(model=cfg, shape=shape, n_workers=args.workers)
+
+    if args.price == "uniform":
+        dist = UniformPrice(0.2, 1.0)
+        proc = IIDPrices(dist, seed=args.seed)
+    elif args.price == "gaussian":
+        dist = TruncGaussianPrice()
+        proc = IIDPrices(dist, seed=args.seed)
+    else:
+        trace = synthetic_history(seed=args.seed)
+        proc = TracePrices(trace, step=0.05)
+        dist = proc.empirical_dist()
+    rt = RuntimeModel(kind="exp", lam=2.0, delta=0.05)
+    prob = default_problem()
+
+    strategy = build_strategy(args.strategy, prob, args.eps, args.theta,
+                              args.workers, dist, rt)
+    cluster = VolatileCluster(n_workers=args.workers, runtime=rt,
+                              market=SpotMarket(proc), seed=args.seed)
+
+    from repro.train.trainer import ElasticTrainer
+    trainer = ElasticTrainer(job=job, cluster=cluster, strategy=strategy,
+                             seed=args.seed)
+    summary = trainer.run(iterations=args.iterations)
+    del summary["log"]
+    print(json.dumps(summary, indent=1, default=float))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,199 @@
+"""GQA attention: full-sequence (train/prefill), KV-cache decode, sliding
+window, and cross-attention (enc-dec). Pure jnp baseline path; the Pallas
+flash kernel (kernels/flash_attention.py) is an optional drop-in for the
+full-sequence causal path.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import (
+    ParamSpec,
+    dense_spec,
+    padded_heads,
+    rope,
+    shard,
+)
+
+NEG_INF = -1e30
+
+# q-length above which the score matrix is computed in chunks (bounds the
+# (B,H,S,T) temp to (B,H,CHUNK,T) — essential at 32k prefill).
+_Q_CHUNK = 512
+
+
+def attn_defs(cfg, cross: bool = False):
+    """ParamSpecs for one attention block. Query heads are padded to the tp
+    degree (zero-init pad heads would break softmax grouping — pad heads get
+    normal init and their output is sliced away by wo's shape). With
+    ``cfg.attn_seq_shard`` the query sequence dim is sharded instead and no
+    padding happens."""
+    d, dh = cfg.d_model, cfg.resolved_head_dim
+    hq = cfg.num_heads if cfg.attn_seq_shard else padded_heads(cfg.num_heads)
+    hkv = cfg.num_kv_heads
+    defs = {
+        "wq": dense_spec(d, hq * dh),
+        "wk": dense_spec(d, hkv * dh),
+        "wv": dense_spec(d, hkv * dh),
+        "wo": dense_spec(hq * dh, d, logical=("tp", "fsdp")),
+    }
+    if cfg.qkv_bias:
+        defs["bq"] = ParamSpec((hq * dh,), ("tp",), init="zeros")
+        defs["bk"] = ParamSpec((hkv * dh,), (("tp", None),), init="zeros")
+        defs["bv"] = ParamSpec((hkv * dh,), (("tp", None),), init="zeros")
+    return defs
+
+
+def _split_heads(x, n_heads, head_dim):
+    return x.reshape(x.shape[:-1] + (n_heads, head_dim))
+
+
+def _mask(qpos, kpos, causal: bool, window: Optional[int]):
+    """(..., S, T) boolean validity mask. kpos < 0 marks unwritten cache."""
+    q = qpos[..., :, None]
+    k = kpos[..., None, :]
+    m = k >= 0
+    if causal:
+        m &= k <= q
+    if window is not None:
+        m &= q - k < window
+    return m
+
+
+def _attend(q, k, v, qpos, kpos, *, causal, window):
+    """Attention core (GQA via kv-head repetition, which keeps the head dim
+    intact so tp sharding propagates without regathers).
+
+    q: (B, S, H, D)   k/v: (B, T, Hkv, D), H = G·Hkv
+    qpos: (B, S) int32     kpos: (B, T) int32 (−1 ⇒ invalid slot)
+    returns (B, S, H, D)
+    """
+    scale = q.shape[-1] ** -0.5
+    g = q.shape[2] // k.shape[2]
+    if g > 1:
+        k = jnp.repeat(k, g, axis=2)
+        v = jnp.repeat(v, g, axis=2)
+
+    def blk(q_blk, qpos_blk):
+        s = jnp.einsum("bshd,bthd->bhst", q_blk.astype(jnp.float32),
+                       k.astype(jnp.float32)) * scale
+        m = _mask(qpos_blk, kpos, causal, window)          # (B, S, T)
+        s = jnp.where(m[:, None], s, NEG_INF)
+        p = jax.nn.softmax(s, axis=-1)
+        return jnp.einsum("bhst,bthd->bshd", p, v.astype(jnp.float32)
+                          ).astype(v.dtype)
+
+    S, T = q.shape[1], k.shape[1]
+    if S > _Q_CHUNK and S * T >= (1 << 22) and S % _Q_CHUNK == 0:
+        nb = S // _Q_CHUNK
+        qs = q.reshape((q.shape[0], nb, _Q_CHUNK) + q.shape[2:])
+        ps = qpos.reshape(qpos.shape[0], nb, _Q_CHUNK)
+        # scan over q chunks keeps the (B,H,chunk,T) temp bounded
+        def body(_, xs):
+            qb, pb = xs
+            return None, blk(qb, pb)
+        _, out = jax.lax.scan(body, None,
+                              (jnp.moveaxis(qs, 1, 0), jnp.moveaxis(ps, 1, 0)))
+        # output head dim follows v (MLA has d_v != d_qk)
+        return jnp.moveaxis(out, 0, 1).reshape(
+            q.shape[:-1] + (v.shape[-1],))
+    return blk(q, qpos)
+
+
+def attention_block(p, cfg, x, qpos, *, kv_src=None, kv_pos=None, cache=None,
+                    cache_pos=None, causal=True, cross_cached=False):
+    """One attention block (self- or cross-).
+
+    x: (B, S, d) hidden states; qpos: (B, S) absolute positions.
+    kv_src: (B, T, d) for cross-attention (keys/values source).
+    cache: optional dict(k, v, pos) — decode mode; new tokens are written at
+      ``cache_pos`` (ring-buffer modulo for sliding windows). For
+      cross-attention decode the cache holds precomputed k/v and is not
+      updated.
+    Returns (y, new_cache).
+    """
+    B, S, _ = x.shape
+    dh = cfg.resolved_head_dim
+    hq = p["wq"].shape[1] // dh
+    hkv = cfg.num_kv_heads
+    assert hq % hkv == 0, (hq, hkv)
+    window = cfg.sliding_window
+
+    q = x @ p["wq"]
+    if "bq" in p:
+        q = q + p["bq"]
+    q = _split_heads(q, hq, dh)
+    if cfg.attn_seq_shard:
+        q = shard(q, "batch", "tp", None, None)
+    else:
+        q = shard(q, "batch", None, "tp", None)
+
+    use_rope = cfg.rope_theta > 0 and kv_src is None and not cross_cached
+    if use_rope:
+        q = rope(q, qpos, cfg.rope_theta)
+
+    if cross_cached:
+        # cross-attention decode: reuse precomputed cross k/v, no update
+        k, v, kpos = cache["k"], cache["v"], cache["pos"]
+        new_cache = cache
+    else:
+        src = kv_src if kv_src is not None else x
+        k = _split_heads(src @ p["wk"] + (p["bk"] if "bk" in p else 0), hkv, dh)
+        v = _split_heads(src @ p["wv"] + (p["bv"] if "bv" in p else 0), hkv, dh)
+        kp = kv_pos if kv_pos is not None else qpos
+        if use_rope:
+            k = rope(k, kp, cfg.rope_theta)
+        k = shard(k, "batch", None, ("tp", None), None)
+        v = shard(v, "batch", None, ("tp", None), None)
+        if cache is not None:
+            W = cache["k"].shape[1]
+            slot = cache_pos % W if window is not None else cache_pos
+            k = jax.lax.dynamic_update_slice_in_dim(cache["k"], k, slot, axis=1)
+            v = jax.lax.dynamic_update_slice_in_dim(cache["v"], v, slot, axis=1)
+            kpos = jax.lax.dynamic_update_slice_in_dim(
+                cache["pos"], kp, slot, axis=1)
+            new_cache = {"k": k, "v": v, "pos": kpos}
+        else:
+            kpos = kp
+            new_cache = None
+
+    is_cross = kv_src is not None or cross_cached
+    ctx = _attend(q, k, v, qpos, kpos, causal=causal and not is_cross,
+                  window=window if not is_cross else None)
+    ctx = ctx.reshape(B, S, hq * dh)
+    y = ctx @ p["wo"]
+    return shard(y, "batch", "residual", None), new_cache
+
+
+def self_cache_defs(cfg, batch: int, seq_len: int):
+    """ParamSpecs (zeros init) for a decode KV cache of one layer."""
+    dh = cfg.resolved_head_dim
+    hkv = cfg.num_kv_heads
+    W = min(seq_len, cfg.sliding_window) if cfg.sliding_window else seq_len
+    mode = cfg.kv_cache_shard
+    tp = ("tp", None) if mode == "heads" else None
+    seq = ("tp", None) if mode == "seq" else None
+    kv = ParamSpec((batch, W, hkv, dh), ("batch", seq, tp, tp),
+                   init="zeros")
+    return {
+        "k": kv,
+        "v": kv,
+        "pos": ParamSpec((batch, W), ("batch", seq), init="neg_ones",
+                         dtype=jnp.int32),
+    }
+
+
+def cross_cache_defs(cfg, batch: int, src_len: int):
+    dh = cfg.resolved_head_dim
+    hkv = cfg.num_kv_heads
+    kv = ParamSpec((batch, src_len, hkv, dh),
+                   ("batch", None, ("tp", None), ("tp", None)), init="zeros")
+    return {
+        "k": kv,
+        "v": kv,
+        "pos": ParamSpec((batch, src_len), ("batch", None), init="zeros",
+                         dtype=jnp.int32),
+    }

@@ -1,0 +1,281 @@
+"""Shared model infrastructure.
+
+* ``ParamSpec`` — single source of truth for every parameter: shape, dtype,
+  logical sharding tokens, initializer. Materialized three ways:
+  ``init_params`` (real arrays), ``abstract_params`` (ShapeDtypeStruct for the
+  dry-run), ``param_shardings`` (NamedSharding pytree).
+* ``mesh_context`` / ``shard`` — logical-axis sharding constraints that
+  degrade gracefully: with no mesh (CPU smoke tests) they are no-ops; with a
+  mesh, a logical token maps to mesh axes and is dropped automatically if the
+  dimension is not divisible (e.g. 14 heads over a 16-way model axis).
+* numerics helpers: RMSNorm, RoPE, SwiGLU, initializers.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+import threading
+import zlib
+from contextlib import contextmanager
+from typing import Any, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding
+from jax.sharding import PartitionSpec as P
+
+# --------------------------------------------------------------------------
+# Mesh / logical-axis context
+# --------------------------------------------------------------------------
+
+#: logical token -> tuple of mesh axis names. ``fsdp`` carries ZeRO-3 param
+#: sharding, ``batch`` the (elastic) data-parallel batch, ``tp`` tensor/expert
+#: parallelism.
+DEFAULT_RULES = {
+    "batch": ("data",),
+    "fsdp": ("data",),
+    "tp": ("model",),
+}
+
+MULTI_POD_RULES = {
+    # batch over pod+data; params FSDP within a pod only (cross-pod traffic is
+    # restricted to the gradient all-reduce — see DESIGN.md §4).
+    "batch": ("pod", "data"),
+    "fsdp": ("data",),
+    "tp": ("model",),
+}
+
+
+@dataclasses.dataclass
+class MeshContext:
+    mesh: Optional[Mesh]
+    rules: dict
+
+
+_TLS = threading.local()
+
+
+def current_ctx() -> MeshContext:
+    ctx = getattr(_TLS, "ctx", None)
+    return ctx if ctx is not None else MeshContext(None, dict(DEFAULT_RULES))
+
+
+@contextmanager
+def mesh_context(mesh: Optional[Mesh], rules: Optional[dict] = None):
+    """Install a mesh + logical-axis rules for model tracing/param layout."""
+    old = getattr(_TLS, "ctx", None)
+    _TLS.ctx = MeshContext(mesh, dict(rules if rules is not None else DEFAULT_RULES))
+    try:
+        yield _TLS.ctx
+    finally:
+        _TLS.ctx = old
+
+
+def axis_size(token: str) -> int:
+    """Product of mesh-axis sizes behind a logical token (1 with no mesh)."""
+    ctx = current_ctx()
+    if ctx.mesh is None:
+        return 1
+    n = 1
+    for a in ctx.rules.get(token, ()):
+        n *= dict(zip(ctx.mesh.axis_names, ctx.mesh.devices.shape))[a]
+    return n
+
+
+def _mesh_axis_sizes(mesh: Mesh) -> dict:
+    return dict(zip(mesh.axis_names, mesh.devices.shape))
+
+
+def resolve_spec(shape: Tuple[int, ...], tokens, rules, mesh: Mesh) -> P:
+    """Map logical tokens to a PartitionSpec, dropping non-divisible dims.
+
+    A token may be a tuple of candidate tokens: the first divisible candidate
+    wins (e.g. ``("tp_heads", "tp_none")`` — shard kv-heads if they divide the
+    model axis, else leave replicated).
+    """
+    sizes = _mesh_axis_sizes(mesh)
+    dims = []
+    used = set()
+    for i, tok in enumerate(tokens):
+        cands = tok if isinstance(tok, tuple) else (tok,)
+        picked = None
+        for cand in cands:
+            if cand is None:
+                continue
+            axes = tuple(a for a in rules.get(cand, ()) if a in sizes)
+            n = math.prod(sizes[a] for a in axes) if axes else 1
+            if (axes and n > 1 and shape[i] % n == 0
+                    and not (set(axes) & used)):
+                picked = axes if len(axes) > 1 else axes[0]
+                used.update(axes)
+                break
+        dims.append(picked)
+    while dims and dims[-1] is None:
+        dims.pop()
+    return P(*dims)
+
+
+def shard(x: jax.Array, *tokens) -> jax.Array:
+    """Apply a logical sharding constraint (no-op without a mesh)."""
+    ctx = current_ctx()
+    if ctx.mesh is None:
+        return x
+    assert len(tokens) == x.ndim, (tokens, x.shape)
+    spec = resolve_spec(x.shape, tokens, ctx.rules, ctx.mesh)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(ctx.mesh, spec))
+
+
+def data_axis_names() -> Tuple[str, ...]:
+    """Mesh axes carrying the batch (the elastic worker axes)."""
+    ctx = current_ctx()
+    return tuple(ctx.rules.get("batch", ("data",)))
+
+
+# --------------------------------------------------------------------------
+# ParamSpec and materialization
+# --------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class ParamSpec:
+    """Declarative parameter leaf (also used for KV-cache buffers)."""
+
+    shape: Tuple[int, ...]
+    logical: Tuple[Optional[str], ...]
+    init: str = "normal"          # normal | zeros | ones
+    scale: float = 1.0            # stddev for "normal"
+    dtype: Any = None             # None -> model param_dtype
+
+    def __post_init__(self):
+        assert len(self.shape) == len(self.logical), (self.shape, self.logical)
+
+
+def dense_spec(d_in: int, d_out: int, logical=("fsdp", "tp"), scale=None,
+               dtype=None) -> ParamSpec:
+    """Standard dense-matrix spec with 1/sqrt(fan_in) init."""
+    return ParamSpec((d_in, d_out), logical,
+                     scale=(scale if scale is not None else d_in ** -0.5),
+                     dtype=dtype)
+
+
+def _path_key(path) -> int:
+    return zlib.crc32(jax.tree_util.keystr(path).encode())
+
+
+def is_spec_leaf(x) -> bool:
+    return isinstance(x, ParamSpec)
+
+
+def tree_map_specs(fn, defs):
+    return jax.tree_util.tree_map(fn, defs, is_leaf=is_spec_leaf)
+
+
+def init_params(defs, key: jax.Array, param_dtype=jnp.float32):
+    """Materialize real parameter arrays from a ParamSpec pytree."""
+
+    def make(path, spec: ParamSpec):
+        dtype = spec.dtype or param_dtype
+        if spec.init == "zeros":
+            return jnp.zeros(spec.shape, dtype)
+        if spec.init == "ones":
+            return jnp.ones(spec.shape, dtype)
+        if spec.init == "neg_ones":
+            return jnp.full(spec.shape, -1, dtype)
+        k = jax.random.fold_in(key, _path_key(path))
+        return (jax.random.normal(k, spec.shape, jnp.float32) * spec.scale
+                ).astype(dtype)
+
+    return jax.tree_util.tree_map_with_path(make, defs, is_leaf=is_spec_leaf)
+
+
+def abstract_params(defs, param_dtype=jnp.bfloat16):
+    """ShapeDtypeStruct pytree (dry-run: no allocation)."""
+    return tree_map_specs(
+        lambda s: jax.ShapeDtypeStruct(s.shape, s.dtype or param_dtype), defs)
+
+
+def param_pspecs(defs, mesh: Mesh, rules=None, fsdp: bool = True):
+    """PartitionSpec pytree for a ParamSpec pytree."""
+    rules = dict(rules if rules is not None else DEFAULT_RULES)
+    if not fsdp:
+        rules["fsdp"] = ()
+
+    def one(spec: ParamSpec) -> P:
+        return resolve_spec(spec.shape, spec.logical, rules, mesh)
+
+    return tree_map_specs(one, defs)
+
+
+def param_shardings(defs, mesh: Mesh, rules=None, fsdp: bool = True):
+    return jax.tree_util.tree_map(
+        lambda p: NamedSharding(mesh, p), param_pspecs(defs, mesh, rules, fsdp))
+
+
+def stack_specs(defs, n: int, logical0: Optional[str] = None):
+    """Add a leading layer dimension to every leaf (for scan-over-layers)."""
+    return tree_map_specs(
+        lambda s: ParamSpec((n,) + s.shape, (logical0,) + s.logical,
+                            init=s.init, scale=s.scale, dtype=s.dtype), defs)
+
+
+def param_count(defs) -> int:
+    return sum(math.prod(s.shape) for s in jax.tree_util.tree_leaves(
+        defs, is_leaf=is_spec_leaf))
+
+
+# --------------------------------------------------------------------------
+# Numerics
+# --------------------------------------------------------------------------
+
+
+def rms_norm(x: jax.Array, weight: jax.Array, eps: float = 1e-5) -> jax.Array:
+    dt = x.dtype
+    x32 = x.astype(jnp.float32)
+    y = x32 * jax.lax.rsqrt(jnp.mean(x32 * x32, axis=-1, keepdims=True) + eps)
+    return (y * weight.astype(jnp.float32)).astype(dt)
+
+
+def rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """Rotary embedding. x: (..., S, H, D) or (..., S, D); positions: (..., S)."""
+    if theta <= 0:
+        return x
+    d = x.shape[-1]
+    half = d // 2
+    freqs = theta ** (-jnp.arange(half, dtype=jnp.float32) / half)
+    ang = positions.astype(jnp.float32)[..., None] * freqs       # (..., S, half)
+    if x.ndim == positions.ndim + 2:                             # head dim present
+        ang = ang[..., None, :]
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    x1, x2 = x[..., :half].astype(jnp.float32), x[..., half:].astype(jnp.float32)
+    return jnp.concatenate(
+        [x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1).astype(x.dtype)
+
+
+def sinusoidal_at(positions: jax.Array, d: int) -> jax.Array:
+    """Whisper-style absolute sinusoidal embeddings at given positions.
+    positions: (...,) int -> (..., d)."""
+    half = d // 2
+    freqs = jnp.exp(-jnp.log(10000.0) * jnp.arange(half) / max(half - 1, 1))
+    ang = positions.astype(jnp.float32)[..., None] * freqs
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)
+
+
+def sinusoidal_positions(length: int, d: int) -> jax.Array:
+    """Whisper-style absolute sinusoidal embeddings (length, d)."""
+    return sinusoidal_at(jnp.arange(length), d)
+
+
+def swiglu(gate_up: jax.Array) -> jax.Array:
+    gate, up = jnp.split(gate_up, 2, axis=-1)
+    return jax.nn.silu(gate) * up
+
+
+def ceil_to(x: int, m: int) -> int:
+    return ((x + m - 1) // m) * m
+
+
+def padded_heads(num_heads: int) -> int:
+    """Pad the query-head count so it shards over the tp axes (zero-padded
+    heads; the compute waste shows up in the roofline MODEL/HLO ratio)."""
+    tp = axis_size("tp")
+    return ceil_to(num_heads, tp) if tp > 1 else num_heads

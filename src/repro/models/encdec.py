@@ -1,0 +1,174 @@
+"""Encoder-decoder transformer (Whisper-style). The audio frontend
+(mel-spectrogram + conv) is a stub: the encoder consumes precomputed frame
+embeddings (B, src_len, d). Absolute sinusoidal positions (rope_theta=0)."""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import attention as attn
+from repro.models.common import (
+    ParamSpec,
+    rms_norm,
+    shard,
+    sinusoidal_at,
+    sinusoidal_positions,
+    stack_specs,
+)
+from repro.models.transformer import (
+    _remat,
+    embed_tokens,
+    mlp_block,
+    mlp_defs,
+    unembed,
+)
+
+
+def enc_layer_defs(cfg):
+    d = cfg.d_model
+    return {
+        "ln1": ParamSpec((d,), (None,), init="ones"),
+        "attn": attn.attn_defs(cfg),
+        "ln2": ParamSpec((d,), (None,), init="ones"),
+        "mlp": mlp_defs(cfg),
+    }
+
+
+def dec_layer_defs(cfg):
+    d = cfg.d_model
+    return {
+        "ln1": ParamSpec((d,), (None,), init="ones"),
+        "self_attn": attn.attn_defs(cfg),
+        "ln_x": ParamSpec((d,), (None,), init="ones"),
+        "cross_attn": attn.attn_defs(cfg, cross=True),
+        "ln2": ParamSpec((d,), (None,), init="ones"),
+        "mlp": mlp_defs(cfg),
+    }
+
+
+def encdec_defs(cfg):
+    d, v = cfg.d_model, cfg.vocab_size
+    return {
+        "embed": ParamSpec((v, d), ("tp", None), scale=0.02),
+        "enc_layers": stack_specs(enc_layer_defs(cfg), cfg.encoder.num_layers),
+        "enc_ln": ParamSpec((d,), (None,), init="ones"),
+        "dec_layers": stack_specs(dec_layer_defs(cfg), cfg.num_layers),
+        "ln_f": ParamSpec((d,), (None,), init="ones"),
+        "lm_head": ParamSpec((d, v), ("fsdp", "tp"), scale=d ** -0.5),
+    }
+
+
+def encode(params, cfg, frames, remat="full"):
+    """frames: (B, src_len, d) stub embeddings -> encoder states."""
+    b, t, d = frames.shape
+    x = frames.astype(cfg.activation_dtype())
+    x = x + sinusoidal_positions(t, d).astype(x.dtype)
+    x = shard(x, "batch", None, None)
+    pos = jnp.broadcast_to(jnp.arange(t, dtype=jnp.int32), (b, t))
+
+    def body(x, layer_p):
+        h = rms_norm(x, layer_p["ln1"], cfg.norm_eps)
+        a, _ = attn.attention_block(layer_p["attn"], cfg, h, pos, causal=False)
+        x = x + a
+        h = rms_norm(x, layer_p["ln2"], cfg.norm_eps)
+        return x + mlp_block(layer_p["mlp"], h)
+
+    body = _remat(body, remat)
+
+    def step(x, layer_p):
+        return body(x, layer_p), None
+
+    x, _ = jax.lax.scan(step, x, params["enc_layers"])
+    return rms_norm(x, params["enc_ln"], cfg.norm_eps)
+
+
+def _dec_layer(p, cfg, x, qpos, enc_out, enc_pos, *, self_cache=None,
+               cross_cache=None, cache_pos=None):
+    h = rms_norm(x, p["ln1"], cfg.norm_eps)
+    a, new_self = attn.attention_block(p["self_attn"], cfg, h, qpos,
+                                       cache=self_cache, cache_pos=cache_pos)
+    x = x + a
+    h = rms_norm(x, p["ln_x"], cfg.norm_eps)
+    a, new_cross = attn.attention_block(
+        p["cross_attn"], cfg, h, qpos, kv_src=enc_out, kv_pos=enc_pos,
+        cache=cross_cache, causal=False, cross_cached=cross_cache is not None)
+    x = x + a
+    h = rms_norm(x, p["ln2"], cfg.norm_eps)
+    return x + mlp_block(p["mlp"], h), new_self, new_cross
+
+
+def encdec_forward(params, cfg, tokens, frames, remat="full"
+                   ) -> Tuple[jax.Array, jax.Array]:
+    """Teacher-forced training/prefill. Returns (logits, aux=0)."""
+    enc_out = encode(params, cfg, frames, remat=remat)
+    b, t_src, d = enc_out.shape
+    enc_pos = jnp.broadcast_to(jnp.arange(t_src, dtype=jnp.int32), (b, t_src))
+    x = embed_tokens(params, cfg, tokens)
+    s = x.shape[1]
+    x = x + sinusoidal_positions(s, d).astype(x.dtype)
+    qpos = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+
+    def body(x, layer_p):
+        y, _, _ = _dec_layer(layer_p, cfg, x, qpos, enc_out, enc_pos)
+        return y
+
+    body = _remat(body, remat)
+
+    def step(x, layer_p):
+        return body(x, layer_p), None
+
+    x, _ = jax.lax.scan(step, x, params["dec_layers"])
+    return unembed(params, cfg, x), jnp.zeros((), jnp.float32)
+
+
+def build_cross_cache(params, cfg, frames, remat="none"):
+    """Run the encoder and precompute per-decoder-layer cross k/v — the
+    enc-dec prefill step (cache["cross"])."""
+    enc_out = encode(params, cfg, frames, remat=remat)
+    b, t, _ = enc_out.shape
+    dh = cfg.resolved_head_dim
+    pos = jnp.broadcast_to(jnp.arange(t, dtype=jnp.int32), (b, t))
+
+    def one(layer_p):
+        ca = layer_p["cross_attn"]
+        k = (enc_out @ ca["wk"]).reshape(b, t, cfg.num_kv_heads, dh)
+        v = (enc_out @ ca["wv"]).reshape(b, t, cfg.num_kv_heads, dh)
+        return {"k": k, "v": v, "pos": pos}
+
+    return jax.tree.map(lambda *xs: jnp.stack(xs), *[
+        one(jax.tree.map(lambda a: a[i], params["dec_layers"]))
+        for i in range(cfg.num_layers)])
+
+
+def encdec_decode(params, cfg, token, caches, pos):
+    """Decoder step (S=1) or chunked prefill (S>1). ``caches`` =
+    {"self": stacked, "cross": stacked} (cross k/v from
+    ``build_cross_cache``)."""
+    x = embed_tokens(params, cfg, token)
+    b, s, d = x.shape
+    qpos = pos + jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+    x = x + sinusoidal_at(qpos, d).astype(x.dtype)
+
+    def step(carry, xs):
+        x = carry
+        layer_p, self_c, cross_c = xs
+        y, new_self, _ = _dec_layer(layer_p, cfg, x, qpos, None, None,
+                                    self_cache=self_c, cross_cache=cross_c,
+                                    cache_pos=pos)
+        return y, new_self
+
+    x, new_self = jax.lax.scan(
+        step, x, (params["dec_layers"], caches["self"], caches["cross"]))
+    return unembed(params, cfg, x), {"self": new_self, "cross": caches["cross"]}
+
+
+def encdec_cache_defs(cfg, batch: int, seq_len: int):
+    return {
+        "self": stack_specs(attn.self_cache_defs(cfg, batch, seq_len),
+                            cfg.num_layers),
+        "cross": stack_specs(
+            attn.cross_cache_defs(cfg, batch, cfg.encoder.src_len),
+            cfg.num_layers),
+    }

@@ -1,0 +1,156 @@
+"""Hybrid Mamba2 + shared-attention backbone (Zamba2-style).
+
+Layers are organized as G = num_layers // attn_every super-groups of
+[attn_every Mamba2 layers + ONE shared attention/MLP block] plus a tail of
+(num_layers % attn_every) Mamba2 layers. The attention/MLP block *parameters*
+are shared across all G application sites (the defining Zamba2 trick); each
+site keeps its own KV cache. Simplification vs. the released checkpoints:
+no per-site LoRA deltas on the shared block (DESIGN.md §3)."""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import attention as attn
+from repro.models import ssm as ssm_mod
+from repro.models.common import ParamSpec, rms_norm, stack_specs
+from repro.models.transformer import (
+    _remat,
+    embed_tokens,
+    mlp_block,
+    mlp_defs,
+    unembed,
+)
+
+
+def _groups(cfg) -> Tuple[int, int]:
+    k = cfg.attn_every
+    return cfg.num_layers // k, cfg.num_layers % k
+
+
+def ssm_layer_defs(cfg):
+    return {
+        "ln": ParamSpec((cfg.d_model,), (None,), init="ones"),
+        "ssm": ssm_mod.ssm_defs(cfg),
+    }
+
+
+def shared_block_defs(cfg):
+    d = cfg.d_model
+    return {
+        "ln1": ParamSpec((d,), (None,), init="ones"),
+        "attn": attn.attn_defs(cfg),
+        "ln2": ParamSpec((d,), (None,), init="ones"),
+        "mlp": mlp_defs(cfg),
+    }
+
+
+def hybrid_defs(cfg):
+    g, tail = _groups(cfg)
+    defs = {
+        "embed": ParamSpec((cfg.vocab_size, cfg.d_model), ("tp", None),
+                           scale=0.02),
+        "groups": stack_specs(stack_specs(ssm_layer_defs(cfg), cfg.attn_every),
+                              g),
+        "shared": shared_block_defs(cfg),
+        "ln_f": ParamSpec((cfg.d_model,), (None,), init="ones"),
+        "lm_head": ParamSpec((cfg.d_model, cfg.vocab_size), ("fsdp", "tp"),
+                             scale=cfg.d_model ** -0.5),
+    }
+    if tail:
+        defs["tail"] = stack_specs(ssm_layer_defs(cfg), tail)
+    return defs
+
+
+def _ssm_layer(p, cfg, x, cache=None):
+    h = rms_norm(x, p["ln"], cfg.norm_eps)
+    y, new_cache = ssm_mod.ssm_block(p["ssm"], cfg, h, cache=cache)
+    return x + y, new_cache
+
+
+def _shared_block(p, cfg, x, qpos, cache=None, cache_pos=None):
+    h = rms_norm(x, p["ln1"], cfg.norm_eps)
+    a, new_cache = attn.attention_block(p["attn"], cfg, h, qpos, cache=cache,
+                                        cache_pos=cache_pos)
+    x = x + a
+    h = rms_norm(x, p["ln2"], cfg.norm_eps)
+    return x + mlp_block(p["mlp"], h), new_cache
+
+
+def hybrid_forward(params, cfg, tokens, remat="full"):
+    x = embed_tokens(params, cfg, tokens)
+    b, s, _ = x.shape
+    qpos = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+    shared_p = params["shared"]
+
+    def group_body(x, group_p):
+        def inner(x, layer_p):
+            y, _ = _ssm_layer(layer_p, cfg, x)
+            return y, None
+
+        x, _ = jax.lax.scan(inner, x, group_p)
+        y, _ = _shared_block(shared_p, cfg, x, qpos)
+        return y
+
+    group_body = _remat(group_body, remat)
+    x, _ = jax.lax.scan(lambda c, g: (group_body(c, g), None), x,
+                        params["groups"])
+
+    if "tail" in params:
+        def tail_body(x, layer_p):
+            y, _ = _ssm_layer(layer_p, cfg, x)
+            return y, None
+
+        x, _ = jax.lax.scan(tail_body, x, params["tail"])
+    return unembed(params, cfg, x), jnp.zeros((), jnp.float32)
+
+
+def hybrid_decode(params, cfg, token, caches, pos):
+    """caches = {"ssm_groups": (G, k, ...), "attn": (G, ...), "ssm_tail"}"""
+    x = embed_tokens(params, cfg, token)
+    b, s, _ = x.shape
+    qpos = pos + jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+    shared_p = params["shared"]
+
+    def group_step(x, xs):
+        group_p, ssm_c, attn_c = xs
+
+        def inner(x, ys):
+            layer_p, c = ys
+            y, new_c = _ssm_layer(layer_p, cfg, x, cache=c)
+            return y, new_c
+
+        x, new_ssm = jax.lax.scan(inner, x, (group_p, ssm_c))
+        x, new_attn = _shared_block(shared_p, cfg, x, qpos, cache=attn_c,
+                                    cache_pos=pos)
+        return x, (new_ssm, new_attn)
+
+    x, (new_ssm_g, new_attn) = jax.lax.scan(
+        group_step, x,
+        (params["groups"], caches["ssm_groups"], caches["attn"]))
+    new_caches = {"ssm_groups": new_ssm_g, "attn": new_attn}
+
+    if "tail" in params:
+        def tail_step(x, ys):
+            layer_p, c = ys
+            y, new_c = _ssm_layer(layer_p, cfg, x, cache=c)
+            return y, new_c
+
+        x, new_tail = jax.lax.scan(tail_step, x,
+                                   (params["tail"], caches["ssm_tail"]))
+        new_caches["ssm_tail"] = new_tail
+    return unembed(params, cfg, x), new_caches
+
+
+def hybrid_cache_defs(cfg, batch: int, seq_len: int):
+    g, tail = _groups(cfg)
+    ssm_one = ssm_mod.ssm_cache_defs(cfg, batch)
+    defs = {
+        "ssm_groups": stack_specs(stack_specs(ssm_one, cfg.attn_every), g),
+        "attn": stack_specs(attn.self_cache_defs(cfg, batch, seq_len), g),
+    }
+    if tail:
+        defs["ssm_tail"] = stack_specs(ssm_one, tail)
+    return defs

@@ -1,0 +1,117 @@
+"""Multi-head Latent Attention (DeepSeek-V2). Decoupled RoPE; the KV cache
+stores only the compressed latent (kv_lora_rank + rope dims per token).
+Training/prefill expands the latent to full K/V; decode uses the absorbed
+formulation (scores and context computed directly in latent space)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.attention import NEG_INF, _attend, _mask
+from repro.models.common import ParamSpec, dense_spec, rms_norm, rope, shard
+
+
+def mla_defs(cfg):
+    m = cfg.mla
+    d, h = cfg.d_model, cfg.num_heads
+    dn, dr, dv, r = m.qk_nope_head_dim, m.qk_rope_head_dim, m.v_head_dim, \
+        m.kv_lora_rank
+    return {
+        "wq": dense_spec(d, h * (dn + dr)),
+        "w_dkv": ParamSpec((d, r + dr), ("fsdp", None), scale=d ** -0.5),
+        "ckv_norm": ParamSpec((r,), (None,), init="ones"),
+        "w_uk": ParamSpec((r, h, dn), (None, "tp", None), scale=r ** -0.5),
+        "w_uv": ParamSpec((r, h, dv), (None, "tp", None), scale=r ** -0.5),
+        "wo": dense_spec(h * dv, d, logical=("tp", "fsdp")),
+    }
+
+
+def _project_q(p, cfg, x, qpos):
+    m = cfg.mla
+    h = cfg.num_heads
+    dn, dr = m.qk_nope_head_dim, m.qk_rope_head_dim
+    b, s, _ = x.shape
+    q = (x @ p["wq"]).reshape(b, s, h, dn + dr)
+    q = shard(q, "batch", None, "tp", None)
+    q_nope, q_rope = q[..., :dn], q[..., dn:]
+    q_rope = rope(q_rope, qpos, cfg.rope_theta)
+    return q_nope, q_rope
+
+
+def _compress_kv(p, cfg, x, kpos):
+    m = cfg.mla
+    r = m.kv_lora_rank
+    ckv_full = x @ p["w_dkv"]
+    c, k_rope = ckv_full[..., :r], ckv_full[..., r:]
+    c = rms_norm(c, p["ckv_norm"], cfg.norm_eps)
+    k_rope = rope(k_rope, kpos, cfg.rope_theta)        # single shared rope head
+    return c, k_rope
+
+
+def mla_block(p, cfg, x, qpos, *, cache=None, cache_pos=None):
+    """MLA attention block. Returns (y, new_cache)."""
+    m = cfg.mla
+    b, s, _ = x.shape
+    h = cfg.num_heads
+    dn, dr, dv, r = m.qk_nope_head_dim, m.qk_rope_head_dim, m.v_head_dim, \
+        m.kv_lora_rank
+    scale_dim = dn + dr
+
+    q_nope, q_rope = _project_q(p, cfg, x, qpos)
+
+    if cache is None:
+        # expanded path (training / prefill)
+        c, k_rope = _compress_kv(p, cfg, x, qpos)
+        k_nope = jnp.einsum("btr,rhn->bthn", c, p["w_uk"])
+        v = jnp.einsum("btr,rhv->bthv", c, p["w_uv"])
+        k = jnp.concatenate(
+            [k_nope, jnp.broadcast_to(k_rope[:, :, None, :], (b, s, h, dr))],
+            axis=-1)
+        qf = jnp.concatenate([q_nope, q_rope], axis=-1)
+        ctx = _attend(qf, k, v, qpos, qpos, causal=True,
+                      window=cfg.sliding_window)
+        ctx = ctx.reshape(b, s, h * dv)
+        new_cache = None
+    else:
+        # absorbed decode (s=1) / chunked prefill (s>1): latent-space attn
+        c_new, krope_new = _compress_kv(p, cfg, x, qpos)
+        W = cache["ckv"].shape[1]
+        slot = cache_pos % W if cfg.sliding_window else cache_pos
+        ckv = jax.lax.dynamic_update_slice_in_dim(cache["ckv"], c_new, slot, 1)
+        krope = jax.lax.dynamic_update_slice_in_dim(
+            cache["krope"], krope_new, slot, 1)
+        kpos = jax.lax.dynamic_update_slice_in_dim(cache["pos"], qpos, slot, 1)
+        new_cache = {"ckv": ckv, "krope": krope, "pos": kpos}
+
+        q_abs = jnp.einsum("bshn,rhn->bshr", q_nope.astype(jnp.float32),
+                           p["w_uk"].astype(jnp.float32))
+        scores = (jnp.einsum("bshr,btr->bhst", q_abs,
+                             ckv.astype(jnp.float32))
+                  + jnp.einsum("bshd,btd->bhst", q_rope.astype(jnp.float32),
+                               krope.astype(jnp.float32))) * scale_dim ** -0.5
+        msk = _mask(qpos, kpos, True, cfg.sliding_window)   # (B,S,T)
+        scores = jnp.where(msk[:, None], scores, NEG_INF)
+        probs = jax.nn.softmax(scores, axis=-1)
+        ctx_c = jnp.einsum("bhst,btr->bshr", probs, ckv.astype(jnp.float32))
+        ctx = jnp.einsum("bshr,rhv->bshv", ctx_c,
+                         p["w_uv"].astype(jnp.float32)).astype(x.dtype)
+        ctx = ctx.reshape(b, s, h * dv)
+
+    y = ctx @ p["wo"]
+    return shard(y, "batch", "residual", None), new_cache
+
+
+def mla_cache_defs(cfg, batch: int, seq_len: int):
+    m = cfg.mla
+    W = min(seq_len, cfg.sliding_window) if cfg.sliding_window else seq_len
+    mode = cfg.kv_cache_shard
+    latent = ("tp", None) if mode == "heads" else None
+    seq = ("tp", None) if mode == "seq" else None
+    return {
+        "ckv": ParamSpec((batch, W, m.kv_lora_rank),
+                         ("batch", seq, latent), init="zeros"),
+        "krope": ParamSpec((batch, W, m.qk_rope_head_dim),
+                           ("batch", seq, None), init="zeros"),
+        "pos": ParamSpec((batch, W), ("batch", seq), init="neg_ones",
+                         dtype=jnp.int32),
+    }

@@ -1,0 +1,127 @@
+"""Unified model API over all families.
+
+* ``param_defs(cfg)``   -> ParamSpec pytree
+* ``forward(params, cfg, batch)``  -> (logits, moe_aux)   [train / prefill]
+* ``decode_step(params, cfg, tokens, caches, pos)`` -> (logits, caches)
+* ``cache_defs(cfg, batch, seq_len)`` -> ParamSpec pytree for decode caches
+* ``make_inputs(cfg, shape, rng)`` / input avals for the dry-run live in
+  launch/dryrun.py (ShapeDtypeStruct only).
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import encdec as encdec_mod
+from repro.models import hybrid as hybrid_mod
+from repro.models import ssm as ssm_mod
+from repro.models import transformer as tf_mod
+from repro.models.common import ParamSpec, stack_specs
+
+
+# ---------------------------------------------------------------- pure-SSM LM
+
+def _ssm_lm_defs(cfg):
+    return {
+        "embed": ParamSpec((cfg.vocab_size, cfg.d_model), ("tp", None),
+                           scale=0.02),
+        "layers": stack_specs(hybrid_mod.ssm_layer_defs(cfg), cfg.num_layers),
+        "ln_f": ParamSpec((cfg.d_model,), (None,), init="ones"),
+        "lm_head": ParamSpec((cfg.d_model, cfg.vocab_size), ("fsdp", "tp"),
+                             scale=cfg.d_model ** -0.5),
+    }
+
+
+def _ssm_lm_forward(params, cfg, tokens, remat="full"):
+    x = tf_mod.embed_tokens(params, cfg, tokens)
+
+    def body(x, layer_p):
+        y, _ = hybrid_mod._ssm_layer(layer_p, cfg, x)
+        return y
+
+    body = tf_mod._remat(body, remat)
+    x, _ = jax.lax.scan(lambda c, lp: (body(c, lp), None), x, params["layers"])
+    return tf_mod.unembed(params, cfg, x), jnp.zeros((), jnp.float32)
+
+
+def _ssm_lm_decode(params, cfg, token, caches, pos):
+    x = tf_mod.embed_tokens(params, cfg, token)
+
+    def step(x, xs):
+        layer_p, c = xs
+        y, new_c = hybrid_mod._ssm_layer(layer_p, cfg, x, cache=c)
+        return y, new_c
+
+    x, new_caches = jax.lax.scan(step, x, (params["layers"], caches))
+    return tf_mod.unembed(params, cfg, x), new_caches
+
+
+def _ssm_lm_cache_defs(cfg, batch, seq_len):
+    del seq_len  # SSM decode state is O(1) in context length
+    return stack_specs(ssm_mod.ssm_cache_defs(cfg, batch), cfg.num_layers)
+
+
+# ---------------------------------------------------------------- dispatch
+
+def param_defs(cfg):
+    if cfg.family == "encdec":
+        return encdec_mod.encdec_defs(cfg)
+    if cfg.family == "ssm":
+        return _ssm_lm_defs(cfg)
+    if cfg.family == "hybrid":
+        return hybrid_mod.hybrid_defs(cfg)
+    return tf_mod.lm_defs(cfg)          # dense | moe | vlm
+
+
+def forward(params, cfg, batch: Dict[str, jax.Array], remat: str = "full"
+            ) -> Tuple[jax.Array, jax.Array]:
+    """batch keys: tokens (B,S); encdec additionally frames (B,src,d);
+    vlm additionally patches (B,P,d)."""
+    if cfg.family == "encdec":
+        return encdec_mod.encdec_forward(params, cfg, batch["tokens"],
+                                         batch["frames"], remat=remat)
+    if cfg.family == "ssm":
+        return _ssm_lm_forward(params, cfg, batch["tokens"], remat=remat)
+    if cfg.family == "hybrid":
+        return hybrid_mod.hybrid_forward(params, cfg, batch["tokens"],
+                                         remat=remat)
+    prefix = batch.get("patches") if cfg.family == "vlm" else None
+    return tf_mod.lm_forward(params, cfg, batch["tokens"],
+                             prefix_embeds=prefix, remat=remat)
+
+
+def decode_step(params, cfg, tokens, caches, pos):
+    """tokens (B,1) int32, pos scalar int32."""
+    if cfg.family == "encdec":
+        return encdec_mod.encdec_decode(params, cfg, tokens, caches, pos)
+    if cfg.family == "ssm":
+        return _ssm_lm_decode(params, cfg, tokens, caches, pos)
+    if cfg.family == "hybrid":
+        return hybrid_mod.hybrid_decode(params, cfg, tokens, caches, pos)
+    return tf_mod.lm_decode(params, cfg, tokens, caches, pos)
+
+
+def cache_defs(cfg, batch: int, seq_len: int):
+    if cfg.family == "encdec":
+        return encdec_mod.encdec_cache_defs(cfg, batch, seq_len)
+    if cfg.family == "ssm":
+        return _ssm_lm_cache_defs(cfg, batch, seq_len)
+    if cfg.family == "hybrid":
+        return hybrid_mod.hybrid_cache_defs(cfg, batch, seq_len)
+    return tf_mod.lm_cache_defs(cfg, batch, seq_len)
+
+
+def prefill(params, cfg, batch: Dict[str, jax.Array], caches, pos=0):
+    """Chunked prefill: consume the whole prompt in ONE cached pass (decode
+    semantics with S>1 — every family). batch: tokens (B, S) (+ frames for
+    enc-dec: the cross cache is built here). Limitations: sliding-window
+    ring caches require the chunk to fit the window without wrap-around.
+    Returns (logits (B, S, V), caches)."""
+    if cfg.family == "encdec":
+        caches = dict(caches)
+        caches["cross"] = encdec_mod.build_cross_cache(params, cfg,
+                                                       batch["frames"])
+    return decode_step(params, cfg, batch["tokens"], caches,
+                       jnp.asarray(pos, jnp.int32))

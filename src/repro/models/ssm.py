@@ -1,0 +1,214 @@
+"""Mamba2 (SSD — state-space duality) block.
+
+Chunked SSD forward (training/prefill): intra-chunk attention-like matmuls +
+inter-chunk linear state recurrence (lax.scan over chunks). O(S·Q) compute,
+O(1)-per-token state — this is what makes ``long_500k`` native for SSM archs.
+Decode: single-token recurrent update of the (H, P, N) state.
+
+Sharding: SSD heads (and d_inner) over ``tp``; the sequence dim is never
+sharded (the recurrence is sequential across chunks). The intra-chunk compute
+is also provided as a Pallas TPU kernel (kernels/ssd_scan.py); this module is
+the pure-jnp path used for CPU smoke tests and the dry-run HLO.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import ParamSpec, dense_spec, rms_norm, shard
+
+
+def ssm_defs(cfg):
+    s = cfg.ssm
+    d = cfg.d_model
+    d_inner = s.expand * d
+    h = d_inner // s.head_dim
+    gn = s.ngroups * s.d_state
+    return {
+        "wz": dense_spec(d, d_inner),
+        "wx": dense_spec(d, d_inner),
+        "wB": ParamSpec((d, gn), ("fsdp", (("tp", None))), scale=d ** -0.5),
+        "wC": ParamSpec((d, gn), ("fsdp", (("tp", None))), scale=d ** -0.5),
+        "wdt": ParamSpec((d, h), ("fsdp", ("tp", None)), scale=d ** -0.5),
+        "conv_x": ParamSpec((s.d_conv, d_inner), (None, "tp"), scale=0.2),
+        "conv_B": ParamSpec((s.d_conv, gn), (None, ("tp", None)), scale=0.2),
+        "conv_C": ParamSpec((s.d_conv, gn), (None, ("tp", None)), scale=0.2),
+        "A_log": ParamSpec((h,), (("tp", None),), init="zeros"),
+        "D": ParamSpec((h,), (("tp", None),), init="ones"),
+        "dt_bias": ParamSpec((h,), (("tp", None),), init="zeros"),
+        "norm_w": ParamSpec((d_inner,), ("tp",), init="ones"),
+        "wo": dense_spec(d_inner, d, logical=("tp", "fsdp")),
+    }
+
+
+def _causal_conv(u: jax.Array, w: jax.Array) -> jax.Array:
+    """Depthwise causal conv. u: (B, S, C), w: (K, C)."""
+    k = w.shape[0]
+    out = u * w[k - 1]
+    for i in range(1, k):
+        shifted = jnp.pad(u, ((0, 0), (i, 0), (0, 0)))[:, :-i]
+        out = out + shifted * w[k - 1 - i]
+    return out
+
+
+def _conv_step(u_t: jax.Array, conv_state: jax.Array, w: jax.Array):
+    """One decode step of the causal conv. u_t: (B, C); conv_state: (B, K-1, C)."""
+    window = jnp.concatenate([conv_state, u_t[:, None]], axis=1)  # (B, K, C)
+    y = jnp.einsum("bkc,kc->bc", window, w)
+    return y, window[:, 1:]
+
+
+def ssd_chunked(xh, dt, a_h, bm, cm, chunk: int, h0: Optional[jax.Array] = None):
+    """Chunked SSD.
+
+    xh: (B, S, H, P)  dt: (B, S, H) (post-softplus)  a_h: (H,) (negative)
+    bm, cm: (B, S, G, N) (G broadcast over heads)
+    Returns y (B, S, H, P) and final state (B, H, P, N) [fp32].
+    """
+    b, s, h, p = xh.shape
+    g, n = bm.shape[2], bm.shape[3]
+    q = min(chunk, s)
+    assert s % q == 0, (s, q)
+    nc = s // q
+    rep = h // g
+
+    f32 = jnp.float32
+    xc = xh.reshape(b, nc, q, h, p).astype(f32)
+    dtc = dt.reshape(b, nc, q, h).astype(f32)
+    bc = bm.reshape(b, nc, q, g, n).astype(f32)
+    cc = cm.reshape(b, nc, q, g, n).astype(f32)
+    bch = jnp.repeat(bc, rep, axis=3)                    # (b,nc,q,h,n)
+    cch = jnp.repeat(cc, rep, axis=3)
+
+    a = dtc * a_h.astype(f32)                            # (b,nc,q,h) ≤ 0
+    cs = jnp.cumsum(a, axis=2)                           # within-chunk cumsum
+
+    # intra-chunk: Y[i] = Σ_{j≤i} exp(cs_i−cs_j)·(C_i·B_j)·dt_j·x_j
+    decay = jnp.exp(
+        jnp.where(
+            jnp.tril(jnp.ones((q, q), bool))[None, None, :, :, None],
+            cs[:, :, :, None, :] - cs[:, :, None, :, :],
+            -jnp.inf,
+        )
+    )                                                    # (b,nc,q_i,q_j,h)
+    scores = jnp.einsum("bcqhn,bckhn->bcqkh", cch, bch)  # (b,nc,q_i,q_j,h)
+    y_intra = jnp.einsum("bcqkh,bckh,bckhp->bcqhp",
+                         scores * decay, dtc, xc)
+
+    # chunk-final states: S_c = Σ_j exp(cs_last−cs_j)·dt_j·B_j⊗x_j
+    last = cs[:, :, -1:, :]                              # (b,nc,1,h)
+    w = jnp.exp(last - cs) * dtc                         # (b,nc,q,h)
+    states = jnp.einsum("bcqh,bcqhn,bcqhp->bchpn", w, bch, xc)
+    chunk_decay = jnp.exp(last[:, :, 0, :])              # (b,nc,h)
+
+    # inter-chunk recurrence
+    init = jnp.zeros((b, h, p, n), f32) if h0 is None else h0.astype(f32)
+
+    def step(hprev, inp):
+        dec, st = inp                                    # dec (b,h), st (b,h,p,n)
+        hnew = hprev * dec[..., None, None] + st
+        return hnew, hprev
+
+    (hfin, hprevs) = jax.lax.scan(
+        step, init,
+        (jnp.moveaxis(chunk_decay, 1, 0), jnp.moveaxis(states, 1, 0)))
+    hprevs = jnp.moveaxis(hprevs, 0, 1)                  # (b,nc,h,p,n)
+
+    y_inter = jnp.einsum("bcqhn,bchpn,bcqh->bcqhp", cch, hprevs, jnp.exp(cs))
+    y = (y_intra + y_inter).reshape(b, s, h, p)
+    return y.astype(xh.dtype), hfin
+
+
+def ssm_block(p, cfg, x, *, cache=None):
+    """Full Mamba2 block. x: (B, S, d). Returns (y, new_cache)."""
+    s_cfg = cfg.ssm
+    b, s, d = x.shape
+    d_inner = s_cfg.expand * d
+    h = d_inner // s_cfg.head_dim
+    hd = s_cfg.head_dim
+    g, n = s_cfg.ngroups, s_cfg.d_state
+
+    z = x @ p["wz"]
+    xin = x @ p["wx"]
+    bin_ = x @ p["wB"]
+    cin = x @ p["wC"]
+    dt_raw = x @ p["wdt"]
+
+    prefill = cache is not None and s > 1
+    if cache is None or prefill:
+        if prefill:
+            # chunked prefill from a fresh state: seed the causal conv with
+            # the cached context (zeros for a fresh cache)
+            ctx_len = cache["conv"].shape[1]
+            u_all = jnp.concatenate([xin, bin_, cin], axis=-1)
+            u_ext = jnp.concatenate([cache["conv"], u_all], axis=1)
+            new_conv_state = u_ext[:, -ctx_len:]
+            xin_f = _causal_conv(u_ext[..., :d_inner], p["conv_x"])
+            bin_f = _causal_conv(u_ext[..., d_inner:d_inner + g * n],
+                                 p["conv_B"])
+            cin_f = _causal_conv(u_ext[..., d_inner + g * n:], p["conv_C"])
+            xin = jax.nn.silu(xin_f[:, ctx_len:])
+            bin_ = jax.nn.silu(bin_f[:, ctx_len:])
+            cin = jax.nn.silu(cin_f[:, ctx_len:])
+            new_cache = None                     # filled below
+        else:
+            xin = jax.nn.silu(_causal_conv(xin, p["conv_x"]))
+            bin_ = jax.nn.silu(_causal_conv(bin_, p["conv_B"]))
+            cin = jax.nn.silu(_causal_conv(cin, p["conv_C"]))
+            new_cache = None
+    else:
+        u = jnp.concatenate([xin, bin_, cin], axis=-1)[:, 0]   # (B, C)
+        y_c, conv_state = _conv_step(u, cache["conv"], jnp.concatenate(
+            [p["conv_x"], p["conv_B"], p["conv_C"]], axis=-1))
+        y_c = jax.nn.silu(y_c)
+        xin = y_c[:, None, :d_inner]
+        bin_ = y_c[:, None, d_inner:d_inner + g * n]
+        cin = y_c[:, None, d_inner + g * n:]
+
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + p["dt_bias"])
+    a_h = -jnp.exp(p["A_log"].astype(jnp.float32))
+
+    xh = xin.reshape(b, s, h, hd)
+    xh = shard(xh, "batch", None, "tp", None)
+    bm = bin_.reshape(b, s, g, n)
+    cm = cin.reshape(b, s, g, n)
+
+    if cache is None or prefill:
+        h0 = cache["h"] if prefill else None
+        y, hfin = ssd_chunked(xh, dt, a_h, bm, cm, s_cfg.chunk_size, h0=h0)
+        if prefill:
+            new_cache = {"h": hfin, "conv": new_conv_state}
+    else:
+        h0 = cache["h"]
+        da = jnp.exp(dt[:, 0] * a_h)                            # (B, H)
+        bmh = jnp.repeat(bm[:, 0], h // g, axis=1)              # (B, H, N)
+        cmh = jnp.repeat(cm[:, 0], h // g, axis=1)
+        x0 = xh[:, 0].astype(jnp.float32)
+        hnew = (h0 * da[..., None, None]
+                + dt[:, 0, :, None, None] * x0[..., None] * bmh[:, :, None, :])
+        y = jnp.einsum("bhpn,bhn->bhp", hnew, cmh)[:, None]     # (B,1,H,P)
+        y = y.astype(x.dtype)
+        new_cache = {"h": hnew, "conv": conv_state}
+
+    y = y.reshape(b, s, d_inner)
+    y = y + (p["D"][None, None, :, None] * xh.astype(jnp.float32)
+             ).reshape(b, s, d_inner).astype(y.dtype)
+    y = rms_norm(y * jax.nn.silu(z), p["norm_w"], cfg.norm_eps)
+    out = y @ p["wo"]
+    return shard(out, "batch", "residual", None), new_cache
+
+
+def ssm_cache_defs(cfg, batch: int):
+    s = cfg.ssm
+    d_inner = s.expand * cfg.d_model
+    h = d_inner // s.head_dim
+    conv_dim = d_inner + 2 * s.ngroups * s.d_state
+    return {
+        "h": ParamSpec((batch, h, s.head_dim, s.d_state),
+                       ("batch", ("tp", None), None, None),
+                       init="zeros", dtype=jnp.float32),
+        "conv": ParamSpec((batch, s.d_conv - 1, conv_dim),
+                          ("batch", None, None), init="zeros"),
+    }

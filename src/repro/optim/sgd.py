@@ -1,0 +1,100 @@
+"""Minimal optimizer library (no optax dependency): SGD(+momentum) — the
+paper's algorithm — plus Adam for the framework's general use. State is a
+pytree mirroring the params, so FSDP sharding applies to it transparently."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class Optimizer:
+    init: Callable[[Any], Any]
+    update: Callable[[Any, Any, Any, jax.Array], Tuple[Any, Any]]
+    # update(grads, state, params, lr) -> (new_params, new_state)
+
+
+def sgd(momentum: float = 0.0, nesterov: bool = False,
+        weight_decay: float = 0.0) -> Optimizer:
+    def init(params):
+        if momentum == 0.0:
+            return ()
+        return jax.tree.map(jnp.zeros_like, params)
+
+    def update(grads, state, params, lr):
+        if weight_decay:
+            grads = jax.tree.map(lambda g, p: g + weight_decay * p, grads,
+                                 params)
+        if momentum == 0.0:
+            new_params = jax.tree.map(
+                lambda p, g: (p - lr * g).astype(p.dtype), params, grads)
+            return new_params, state
+        new_state = jax.tree.map(
+            lambda v, g: (momentum * v + g).astype(v.dtype), state, grads)
+        if nesterov:
+            step = jax.tree.map(lambda v, g: momentum * v + g, new_state,
+                                grads)
+        else:
+            step = new_state
+        new_params = jax.tree.map(
+            lambda p, s: (p - lr * s).astype(p.dtype), params, step)
+        return new_params, new_state
+
+    return Optimizer(init, update)
+
+
+def adam(b1: float = 0.9, b2: float = 0.999, eps: float = 1e-8,
+         weight_decay: float = 0.0) -> Optimizer:
+    def init(params):
+        z = jax.tree.map(lambda p: jnp.zeros_like(p, dtype=jnp.float32),
+                         params)
+        return {"m": z, "v": jax.tree.map(jnp.zeros_like, z),
+                "t": jnp.zeros((), jnp.int32)}
+
+    def update(grads, state, params, lr):
+        t = state["t"] + 1
+        m = jax.tree.map(lambda m_, g: b1 * m_ + (1 - b1) * g.astype(m_.dtype),
+                         state["m"], grads)
+        v = jax.tree.map(
+            lambda v_, g: b2 * v_ + (1 - b2) * jnp.square(g.astype(v_.dtype)),
+            state["v"], grads)
+        mh = jax.tree.map(lambda m_: m_ / (1 - b1 ** t), m)
+        vh = jax.tree.map(lambda v_: v_ / (1 - b2 ** t), v)
+
+        def step(p, mh_, vh_):
+            upd = mh_ / (jnp.sqrt(vh_) + eps)
+            if weight_decay:
+                upd = upd + weight_decay * p.astype(upd.dtype)
+            return (p.astype(jnp.float32) - lr * upd).astype(p.dtype)
+
+        return jax.tree.map(step, params, mh, vh), {"m": m, "v": v, "t": t}
+
+    return Optimizer(init, update)
+
+
+def get_optimizer(name: str, momentum: float = 0.9) -> Optimizer:
+    if name == "sgd":
+        return sgd(momentum=momentum)
+    if name == "adam":
+        return adam()
+    raise ValueError(name)
+
+
+def constant_lr(lr: float):
+    return lambda step: jnp.asarray(lr, jnp.float32)
+
+
+def cosine_lr(lr: float, total_steps: int, warmup: int = 0,
+              floor: float = 0.0):
+    def f(step):
+        step = jnp.asarray(step, jnp.float32)
+        warm = jnp.minimum(step / jnp.maximum(warmup, 1), 1.0)
+        prog = jnp.clip((step - warmup) / jnp.maximum(total_steps - warmup, 1),
+                        0.0, 1.0)
+        cos = floor + (1 - floor) * 0.5 * (1 + jnp.cos(jnp.pi * prog))
+        return lr * jnp.where(step < warmup, warm, cos)
+
+    return f

@@ -1,0 +1,49 @@
+"""Preemption-safe checkpointing: flat .npz with path-keyed leaves, written
+atomically (tmp + rename) so a preemption mid-write never corrupts the last
+good checkpoint. The parameter server in the paper's deployment lives on an
+on-demand instance; here the checkpoint is the equivalent durable state."""
+from __future__ import annotations
+
+import os
+import tempfile
+from typing import Any, Tuple
+
+import jax
+import numpy as np
+
+
+def _flatten(tree) -> dict:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        flat[jax.tree_util.keystr(path)] = np.asarray(leaf)
+    return flat
+
+
+def save(path: str, state: Any, step: int) -> None:
+    flat = _flatten(state)
+    flat["__step__"] = np.asarray(step)
+    d = os.path.dirname(os.path.abspath(path))
+    os.makedirs(d, exist_ok=True)
+    fd, tmp = tempfile.mkstemp(dir=d, suffix=".tmp.npz")
+    os.close(fd)
+    try:
+        np.savez(tmp, **flat)
+        os.replace(tmp, path)
+    finally:
+        if os.path.exists(tmp):
+            os.unlink(tmp)
+
+
+def restore(path: str, like: Any) -> Tuple[Any, int]:
+    """Restore into the structure of `like` (values replaced by saved
+    arrays)."""
+    with np.load(path) as data:
+        step = int(data["__step__"])
+        leaves_paths = jax.tree_util.tree_flatten_with_path(like)[0]
+        treedef = jax.tree_util.tree_structure(like)
+        leaves = []
+        for p, leaf in leaves_paths:
+            key = jax.tree_util.keystr(p)
+            arr = data[key]
+            leaves.append(jax.numpy.asarray(arr, dtype=leaf.dtype))
+    return jax.tree_util.tree_unflatten(treedef, leaves), step

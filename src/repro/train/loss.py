@@ -1,0 +1,34 @@
+"""Loss functions with elastic worker weighting."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.elastic import example_weights
+
+
+def next_token_loss(logits, labels, weights=None):
+    """Cross entropy of logits (B,S,V) vs labels (B,S) with optional
+    per-token weights (B,S). Normalizes by Σ weights (the masked worker
+    average of Eq. (5))."""
+    v = logits.shape[-1]
+    lse = jax.nn.logsumexp(logits.astype(jnp.float32), axis=-1)
+    gold = jnp.take_along_axis(logits.astype(jnp.float32),
+                               labels[..., None], axis=-1)[..., 0]
+    nll = lse - gold
+    if weights is None:
+        weights = jnp.ones_like(nll)
+    weights = weights.astype(jnp.float32)
+    denom = jnp.maximum(weights.sum(), 1e-6)
+    return (nll * weights).sum() / denom
+
+
+def elastic_token_weights(active_mask, batch_size: int, seq_len: int,
+                          label_mask=None):
+    """(B,S) weights: worker mask broadcast over the sequence × optional
+    label mask (e.g. VLM text-only positions)."""
+    w = example_weights(active_mask, batch_size)[:, None]
+    w = jnp.broadcast_to(w, (batch_size, seq_len))
+    if label_mask is not None:
+        w = w * label_mask.astype(w.dtype)
+    return w

@@ -1,0 +1,149 @@
+"""Elastic train/serve step builders — shared by the CPU trainer, the smoke
+tests, and the multi-pod dry-run (which lowers these exact functions)."""
+from __future__ import annotations
+
+from typing import Callable, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import JobConfig, ModelConfig
+from repro.models import model_zoo
+from repro.models.common import shard
+from repro.optim.sgd import constant_lr, get_optimizer
+from repro.train.loss import elastic_token_weights, next_token_loss
+
+
+def make_train_step(cfg: ModelConfig, job: JobConfig,
+                    lr_fn: Optional[Callable] = None, remat: str = "full"):
+    """Returns train_step(params, opt_state, batch, active_mask, step).
+
+    batch: tokens (B,S), labels (B,S), optional label_mask (B,S), frames /
+    patches for encdec / vlm. active_mask: (n_workers,) float — the elastic
+    worker mask (Eq. (5) with y_j = Σ mask).
+    """
+    opt = get_optimizer(job.optimizer, job.momentum)
+    lr_fn = lr_fn or constant_lr(job.learning_rate)
+    n_micro = max(job.microbatch, 1)
+
+    def _losses(p, batch, active_mask, b):
+        """(weighted nll sum, weight sum, aux) for one (micro)batch —
+        sum-form so microbatch accumulation is exactly the full-batch
+        masked mean of Eq. (5)."""
+        logits, aux = model_zoo.forward(p, cfg, batch, remat=remat)
+        if cfg.family == "vlm":
+            logits_txt = logits[:, cfg.vision.num_patches:]
+        else:
+            logits_txt = logits
+        labels = batch["labels"]
+        s = labels.shape[1]
+        w = elastic_token_weights(active_mask, b, s, batch.get("label_mask"))
+        w = shard(w, "batch", None)
+        lse = jax.nn.logsumexp(logits_txt.astype(jnp.float32), axis=-1)
+        gold = jnp.take_along_axis(logits_txt.astype(jnp.float32),
+                                   labels[..., None], axis=-1)[..., 0]
+        nll_sum = ((lse - gold) * w.astype(jnp.float32)).sum()
+        return nll_sum, w.astype(jnp.float32).sum(), aux
+
+    def train_step(params, opt_state, batch: Dict, active_mask, step):
+        tokens = batch["tokens"]
+        b = tokens.shape[0]
+
+        if n_micro == 1:
+            def loss_fn(p):
+                nll_sum, w_sum, aux = _losses(p, batch, active_mask, b)
+                loss = nll_sum / jnp.maximum(w_sum, 1e-6)
+                if cfg.moe is not None:
+                    loss = loss + cfg.moe.aux_loss_weight * aux
+                return loss, aux
+
+            (loss, aux), grads = jax.value_and_grad(loss_fn, has_aux=True)(
+                params)
+        else:
+            # gradient accumulation: scan over micro-slices of the batch;
+            # grads of the SUM accumulate, normalization by Σw at the end
+            assert b % n_micro == 0, (b, n_micro)
+            mb = b // n_micro
+            micro = {k: v.reshape((n_micro, mb) + v.shape[1:])
+                     for k, v in batch.items()}
+            n_w = active_mask.shape[0]
+            assert n_w % n_micro == 0, (
+                "n_workers must split evenly across microbatches so worker "
+                "slices stay contiguous", n_w, n_micro)
+            mask_micro = active_mask.reshape(n_micro, n_w // n_micro)
+
+            aux_w = cfg.moe.aux_loss_weight if cfg.moe is not None else 0.0
+
+            def scan_body(carry, xs):
+                g_acc, nll_acc, w_acc, aux_acc = carry
+                mbatch, mmask = xs
+
+                def f(p):
+                    nll, w_sum, aux = _losses(p, mbatch, mmask, mb)
+                    # fold the aux loss in sum-form (× w_sum) so dividing by
+                    # the global Σw yields CE + aux_w·weighted-mean(aux)
+                    return nll + aux_w * aux * w_sum, (w_sum, aux)
+
+                (obj, (w_sum, aux)), g = jax.value_and_grad(
+                    f, has_aux=True)(params)
+                g_acc = jax.tree.map(jnp.add, g_acc, g)
+                return (g_acc, nll_acc + obj, w_acc + w_sum,
+                        aux_acc + aux), None
+
+            zeros = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            (g_sum, nll_sum, w_sum, aux_sum), _ = jax.lax.scan(
+                scan_body,
+                (zeros, jnp.zeros((), jnp.float32),
+                 jnp.zeros((), jnp.float32), jnp.zeros((), jnp.float32)),
+                (micro, mask_micro))
+            denom = jnp.maximum(w_sum, 1e-6)
+            grads = jax.tree.map(lambda g: g / denom, g_sum)
+            aux = aux_sum / n_micro
+            loss = nll_sum / denom
+
+        lr = lr_fn(step)
+        new_params, new_opt = opt.update(grads, opt_state, params, lr)
+        metrics = {
+            "loss": loss,
+            "moe_aux": aux,
+            "active_workers": active_mask.sum(),
+            "lr": lr,
+        }
+        return new_params, new_opt, metrics
+
+    return train_step
+
+
+def make_eval_step(cfg: ModelConfig):
+    def eval_step(params, batch):
+        logits, _ = model_zoo.forward(params, cfg, batch, remat="none")
+        if cfg.family == "vlm":
+            logits = logits[:, cfg.vision.num_patches:]
+        return next_token_loss(logits, batch["labels"],
+                               batch.get("label_mask"))
+
+    return eval_step
+
+
+def make_serve_step(cfg: ModelConfig):
+    """One decode step: greedy next token + updated caches. This is the
+    function the decode_* dry-run shapes lower."""
+
+    def serve_step(params, caches, tokens, pos):
+        logits, new_caches = model_zoo.decode_step(params, cfg, tokens,
+                                                   caches, pos)
+        next_tok = jnp.argmax(logits[:, -1:], axis=-1).astype(jnp.int32)
+        return next_tok, new_caches
+
+    return serve_step
+
+
+def init_train_state(cfg: ModelConfig, job: JobConfig, key):
+    """(params, opt_state) for CPU-scale runs (tests/examples)."""
+    from repro.models.common import init_params
+
+    defs = model_zoo.param_defs(cfg)
+    params = init_params(defs, key, jnp.dtype(cfg.param_dtype))
+    opt = get_optimizer(job.optimizer, job.momentum)
+    return params, opt.init(params)

@@ -1,0 +1,101 @@
+"""The elastic trainer: wires the spot-market/cluster simulator, the paper's
+strategies, the elastic train step, and checkpointing into one loop.
+
+Runs real (reduced) models on CPU for tests/examples/benchmarks; on hardware
+the same loop drives the full mesh (the step function is identical — the
+dry-run compiles it for the production mesh).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import JobConfig
+from repro.core.strategies import Strategy
+from repro.data.synthetic import lm_batch
+from repro.sim.cluster import VolatileCluster
+from repro.train import checkpoint as ckpt_mod
+from repro.train.train_step import init_train_state, make_train_step
+
+
+@dataclasses.dataclass
+class TrainLogEntry:
+    j: int
+    time: float
+    cost: float
+    loss: float
+    y: int
+
+
+@dataclasses.dataclass
+class ElasticTrainer:
+    job: JobConfig
+    cluster: VolatileCluster
+    strategy: Strategy
+    mode: str = "spot"                 # "spot" | "preemptible"
+    checkpoint_path: Optional[str] = None
+    checkpoint_every: int = 0
+    seed: int = 0
+
+    def __post_init__(self):
+        cfg = self.job.model
+        self._step_fn = jax.jit(make_train_step(cfg, self.job, remat="none"))
+        key = jax.random.PRNGKey(self.job.seed)
+        self.params, self.opt_state = init_train_state(cfg, self.job, key)
+        self.log: List[TrainLogEntry] = []
+        self._j = 0
+
+    # ---------------------------------------------------------------- loop
+
+    def run(self, iterations: Optional[int] = None,
+            batch_fn: Optional[Callable[[int], Dict]] = None) -> Dict:
+        cfg = self.job.model
+        total = iterations or self.strategy.total_iterations
+        shape = self.job.shape
+        n_w = self.job.n_workers
+
+        for j in range(self._j, total):
+            if self.mode == "spot":
+                bids = self.strategy.bids(self.cluster.t, j)
+                assert len(bids) == n_w, (len(bids), n_w)
+                mask = self.cluster.next_iteration_spot(j, np.asarray(bids))
+            else:
+                prov = min(self.strategy.workers(j), n_w)
+                mask = self.cluster.next_iteration_preemptible(j, prov)
+                mask = np.pad(mask, (0, n_w - len(mask)))[:n_w]
+
+            batch = batch_fn(j) if batch_fn else lm_batch(
+                cfg, shape.global_batch, shape.seq_len, j, seed=self.seed)
+            batch = {k: jnp.asarray(v) for k, v in batch.items()}
+            self.params, self.opt_state, metrics = self._step_fn(
+                self.params, self.opt_state, batch, jnp.asarray(mask),
+                jnp.asarray(j, jnp.int32))
+            self.log.append(TrainLogEntry(
+                j=j, time=self.cluster.t, cost=self.cluster.total_cost,
+                loss=float(metrics["loss"]), y=int(mask.sum())))
+            self._j = j + 1
+            if (self.checkpoint_path and self.checkpoint_every
+                    and (j + 1) % self.checkpoint_every == 0):
+                ckpt_mod.save(self.checkpoint_path,
+                              {"params": self.params,
+                               "opt": self.opt_state}, j + 1)
+
+        return self.summary()
+
+    def restore(self):
+        assert self.checkpoint_path
+        state, step = ckpt_mod.restore(
+            self.checkpoint_path, {"params": self.params,
+                                   "opt": self.opt_state})
+        self.params, self.opt_state = state["params"], state["opt"]
+        self._j = step
+
+    def summary(self) -> Dict:
+        s = self.cluster.summary()
+        s["final_loss"] = self.log[-1].loss if self.log else float("nan")
+        s["log"] = self.log
+        return s

@@ -1,0 +1,9 @@
+import os
+
+# Keep tests single-device (the dry-run sets its own 512-device flag in a
+# subprocess); cap threads for the 1-core container.
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+import jax  # noqa: E402
+
+jax.config.update("jax_enable_x64", False)

@@ -1,0 +1,100 @@
+"""Theorems 2–3: optimality vs brute-force grids and simulated-market
+validation of the (ε, θ) guarantees."""
+import numpy as np
+import pytest
+
+from repro.core import bidding, convergence as conv, preemption
+from repro.core.bidding import _two_bid_expectations
+from repro.core.cost_model import (
+    RuntimeModel,
+    TruncGaussianPrice,
+    UniformPrice,
+    expected_cost_uniform_bid,
+    expected_time_uniform_bid,
+)
+from repro.sim.cluster import VolatileCluster
+from repro.sim.spot_market import IIDPrices, SpotMarket
+
+PROB = conv.SGDProblem(alpha=0.05, c=1.0, mu=1.0, L=2.0, M=4.0, G0=10.0)
+RT = RuntimeModel(kind="exp", lam=2.0, delta=0.05)
+DISTS = [UniformPrice(0.2, 1.0), TruncGaussianPrice(0.6, 0.175, 0.2, 1.0)]
+
+
+@pytest.mark.parametrize("dist", DISTS)
+def test_theorem2_optimal_among_grid(dist):
+    """b* minimizes Lemma-2 cost among all bids meeting the deadline."""
+    eps, theta, n = 0.5, 400.0, 8
+    plan = bidding.optimal_uniform_bid(PROB, eps, theta, n, dist, RT)
+    assert plan.expected_time <= theta * (1 + 1e-6)
+    assert plan.expected_error <= eps + 1e-9
+    for b in np.linspace(dist.lo + 1e-3, dist.hi, 60):
+        t = expected_time_uniform_bid(plan.J, n, b, dist, RT)
+        if t <= theta:
+            c = expected_cost_uniform_bid(plan.J, n, b, dist, RT)
+            assert c >= plan.expected_cost - 1e-6, (b, c, plan.expected_cost)
+
+
+@pytest.mark.parametrize("dist", DISTS)
+def test_theorem3_optimal_among_grid(dist):
+    """(b1*, b2*) beats a brute-force (F1, γ) grid subject to the error and
+    deadline constraints at the same J, n1."""
+    eps, theta, n1, n = 0.5, 500.0, 2, 8
+    J = conv.phi_inverse(PROB, eps, 1.0 / n) + 10
+    q_ = conv.q_eps(PROB, J, eps)
+    if not (1 / n < q_):
+        pytest.skip("precondition violated for chosen constants")
+    plan = bidding.optimal_two_bids(PROB, eps, theta, n1, n, J, dist, RT)
+    assert plan.expected_time <= theta * (1 + 1e-6)
+    assert plan.expected_error <= eps * (1 + 1e-6)
+    for f1 in np.linspace(0.05, 1.0, 24):
+        for gamma in np.linspace(0.0, 1.0, 24):
+            inv_y = preemption.inv_y_two_groups(n1, n, gamma)
+            err = conv.error_bound_static(PROB, J, inv_y)
+            e_tau, cost, _, _ = _two_bid_expectations(J, n1, n, f1, gamma,
+                                                      dist, RT)
+            if err <= eps and e_tau <= theta:
+                assert cost >= plan.expected_cost * (1 - 1e-3), (
+                    f1, gamma, cost, plan.expected_cost)
+
+
+def test_two_bids_cheaper_than_one_bid_cheaper_than_no_interruptions():
+    """The paper's headline ordering at matched (ε, θ)."""
+    dist = UniformPrice(0.2, 1.0)
+    eps, theta, n = 0.5, 600.0, 8
+    p_no = bidding.no_interruption_bid(PROB, eps, n, dist, RT)
+    p_one = bidding.optimal_uniform_bid(PROB, eps, theta, n, dist, RT)
+    p_two = bidding.co_optimize_two_bids(PROB, eps, theta, n, dist, RT)
+    assert p_one.expected_cost <= p_no.expected_cost + 1e-9
+    assert p_two.expected_cost <= p_one.expected_cost + 1e-9
+
+
+@pytest.mark.parametrize("dist", DISTS)
+def test_simulated_market_meets_deadline_and_cost(dist):
+    """Run the actual market sim with the plan's bids: empirical time/cost
+    concentrate near the Lemma 1/2 predictions."""
+    eps, theta, n = 0.5, 800.0, 4
+    plan = bidding.optimal_uniform_bid(PROB, eps, theta, n, dist, RT)
+    times, costs = [], []
+    for seed in range(25):
+        cluster = VolatileCluster(
+            n_workers=n, runtime=RT,
+            market=SpotMarket(IIDPrices(dist, seed=seed)), seed=seed,
+            idle_step=RT.expected(n))  # price redraw period ≈ iteration time
+        for j in range(plan.J):
+            cluster.next_iteration_spot(j, plan.bids)
+        s = cluster.summary()
+        times.append(s["time"])
+        costs.append(s["cost"])
+    assert np.mean(times) <= theta * 1.15
+    assert np.mean(costs) == pytest.approx(plan.expected_cost, rel=0.15)
+
+
+def test_corollary1_joint_j_and_bids():
+    """Co-optimizing J never does worse than the minimal-J plan."""
+    dist = UniformPrice(0.2, 1.0)
+    eps, theta, n = 0.5, 800.0, 8
+    j_min = conv.phi_inverse(PROB, eps, 1.0 / n)
+    base = bidding.optimal_two_bids(PROB, eps, theta, 4, n, j_min + 1, dist,
+                                    RT)
+    co = bidding.co_optimize_two_bids(PROB, eps, theta, n, dist, RT)
+    assert co.expected_cost <= base.expected_cost + 1e-9

@@ -1,0 +1,182 @@
+"""Theorem 1 and its corollaries, validated against Monte-Carlo SGD on a
+strongly-convex quadratic with exactly known constants."""
+import numpy as np
+import pytest
+
+from repro.core import convergence as conv
+from repro.core import preemption
+from repro.data.synthetic import QuadraticProblem
+
+
+@pytest.fixture(scope="module")
+def quad():
+    return QuadraticProblem(dim=10, n_samples=256, cond=8.0, noise=0.6,
+                            seed=0)
+
+
+@pytest.fixture(scope="module")
+def sgd_problem(quad):
+    w0 = quad.w_star + 2.0 * np.ones(quad.dim) / np.sqrt(quad.dim)
+    g0 = quad.loss(w0) - quad.g_star
+    m = quad.grad_noise_bound(w_scale=2.0, batch=4)
+    alpha = min(0.5 / quad.L, 1.0 / (quad.L * 2))
+    return conv.SGDProblem(alpha=alpha, c=quad.c, mu=1.0, L=quad.L,
+                           M=m, G0=g0), w0
+
+
+def run_sgd(quad, w0, alpha, J, workers_fn, seed=0, batch=4):
+    """Synchronous SGD with y_j = workers_fn(j, rng) active workers, each
+    contributing a size-`batch` minibatch gradient (Eq. 5)."""
+    rng = np.random.default_rng(seed)
+    w = w0.copy()
+    for j in range(J):
+        y = workers_fn(j, rng)
+        g = np.mean([quad.grad_minibatch(w, rng, batch) for _ in range(y)],
+                    axis=0)
+        w = w - alpha * g
+    return quad.loss(w) - quad.g_star
+
+
+def test_theorem1_bound_holds_static_workers(quad, sgd_problem):
+    prob, w0 = sgd_problem
+    J, n, reps = 40, 4, 12
+    errs = [run_sgd(quad, w0, prob.alpha, J, lambda j, r: n, seed=s)
+            for s in range(reps)]
+    bound = conv.error_bound_static(prob, J, 1.0 / n)
+    assert np.mean(errs) <= bound * 1.05, (np.mean(errs), bound)
+
+
+def test_theorem1_bound_holds_volatile_workers(quad, sgd_problem):
+    """The core claim: with y_j random (preemption q), the bound with
+    E[1/y_j] still dominates the observed error."""
+    prob, w0 = sgd_problem
+    J, n, q, reps = 40, 4, 0.4, 12
+
+    def workers(j, rng):
+        while True:
+            y = rng.binomial(n, 1 - q)
+            if y > 0:
+                return y
+
+    errs = [run_sgd(quad, w0, prob.alpha, J, workers, seed=100 + s)
+            for s in range(reps)]
+    inv_y = preemption.inv_y_binomial(n, q)
+    bound = conv.error_bound_static(prob, J, inv_y)
+    assert np.mean(errs) <= bound * 1.05, (np.mean(errs), bound)
+
+
+def test_volatility_penalty_jensen(quad, sgd_problem):
+    """Remark 1: E[1/y] ≥ 1/E[y] — volatile workers have a strictly larger
+    noise floor than a fixed fleet of the same mean size."""
+    for n in (2, 4, 8, 16):
+        for q in (0.1, 0.3, 0.5):
+            inv_y = preemption.inv_y_binomial(n, q)
+            k, p = preemption.pmf_binomial_conditional(n, q)
+            mean_y = float(np.sum(k * p))
+            assert inv_y >= 1.0 / mean_y - 1e-12
+
+
+def test_bound_increases_with_preemption_probability():
+    """Remark 2."""
+    vals = [preemption.inv_y_binomial(8, q) for q in (0.0, 0.2, 0.4, 0.6,
+                                                      0.8)]
+    assert all(a < b for a, b in zip(vals, vals[1:]))
+
+
+def test_corollary1_consistency(sgd_problem):
+    prob, _ = sgd_problem
+    inv_y = 1.0 / 8
+    kappa = prob.B * inv_y / (1 - prob.beta)      # the noise floor
+    eps = min(1.5 * kappa, 0.8 * prob.G0)         # feasible target above it
+    J = conv.iterations_required(prob, eps, inv_y)
+    assert conv.error_bound_static(prob, J, inv_y) <= eps + 1e-9
+    if J > 0:
+        assert conv.error_bound_static(prob, J - 1, inv_y) > eps
+    # below the floor the required J must be reported as unreachable
+    with pytest.raises(ValueError):
+        conv.iterations_required(prob, 0.5 * kappa, inv_y)
+
+
+def test_q_eps_inverts_bound(sgd_problem):
+    prob, _ = sgd_problem
+    J, eps = 50, 0.4
+    q = conv.q_eps(prob, J, eps)
+    if 0 < q < 1:
+        assert conv.error_bound_static(prob, J, q) == pytest.approx(eps,
+                                                                    rel=1e-6)
+
+
+def test_nonconvex_extension_bound_holds(quad):
+    """The non-convex stationary-point bound (paper's omitted extension):
+    G = quadratic + λ·Σcos(w_i) is smooth but non-convex; with volatile
+    workers the min grad-norm must sit under the bound."""
+    lam = 2.0
+    rng = np.random.default_rng(7)
+    w0 = quad.w_star + 2.0 * np.ones(quad.dim) / np.sqrt(quad.dim)
+
+    def grad_full(w):
+        r = np.einsum("sij,j->si", quad.A, w) - quad.b
+        return np.einsum("sij,si->j", quad.A, r) / quad.n_samples \
+            - lam * np.sin(w)
+
+    def grad_mb(w, batch=4):
+        return quad.grad_minibatch(w, rng, batch) - lam * np.sin(w)
+
+    def g_val(w):
+        return quad.loss(w) + lam * np.sum(np.cos(w))
+
+    L = quad.L + lam                       # Hessian shift by ±λ
+    m = quad.grad_noise_bound(w_scale=2.0, batch=4)
+    g_inf = quad.g_star - lam * quad.dim   # cos ≥ −1 per coordinate
+    alpha = 0.3 / L
+    prob = conv.SGDProblem(alpha=alpha, c=1e-3, mu=1.0, L=L, M=m,
+                           G0=g_val(w0))
+
+    J, n, q, reps = 60, 4, 0.4, 8
+    min_norms = []
+    for rep in range(reps):
+        w = w0.copy()
+        norms = []
+        for j in range(J):
+            y = 0
+            while y == 0:
+                y = rng.binomial(n, 1 - q)
+            g = np.mean([grad_mb(w) for _ in range(y)], axis=0)
+            norms.append(np.sum(grad_full(w) ** 2))
+            w = w - alpha * g
+        min_norms.append(min(norms))
+    inv_y = preemption.inv_y_binomial(n, q)
+    bound = conv.grad_norm_bound_nonconvex_static(prob, J, inv_y,
+                                                  g_inf=g_inf)
+    assert np.mean(min_norms) <= bound * 1.05, (np.mean(min_norms), bound)
+
+
+def test_nonconvex_bound_volatility_penalty():
+    """Remark 2 carries over: the non-convex bound grows with q."""
+    prob = conv.SGDProblem(alpha=0.01, c=1.0, mu=1.0, L=4.0, M=10.0,
+                           G0=5.0)
+    vals = [conv.grad_norm_bound_nonconvex_static(
+        prob, 50, preemption.inv_y_binomial(8, q)) for q in
+        (0.1, 0.4, 0.7)]
+    assert vals[0] < vals[1] < vals[2]
+
+
+def test_theorem5_dynamic_beats_static(sgd_problem):
+    """Theorem 5: the exponential schedule run for the log-shortened horizon
+    achieves a bound no larger than the static one, and its J→∞ floor is 0
+    while the static floor is positive."""
+    prob, _ = sgd_problem
+    n0, chi, d, eta = 2, 1.0, 1.0, 1.5
+    assert eta > (1 / prob.beta) ** (1 / chi)
+    for J in (200, 500, 2000):
+        Jp = conv.dynamic_iterations(J, eta, chi)
+        assert Jp < J
+        dyn = conv.error_bound_dynamic(prob, Jp, n0, eta, chi, d)
+        stat = conv.error_bound_static(prob, J, d / n0)
+        assert dyn <= stat * 1.01, (J, Jp, dyn, stat)
+    floor = conv.asymptotic_floor_static(prob, n0, chi, d)
+    assert floor > 0
+    big = conv.error_bound_dynamic(prob, conv.dynamic_iterations(10 ** 6, eta,
+                                                                 chi),
+                                   n0, eta, chi, d)
+    assert big < floor * 0.5

@@ -1,0 +1,113 @@
+"""Elastic-SGD mechanism: the masked gradient equals Eq. (5)'s average over
+active workers only — the key runtime-correctness property."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCHS
+from repro.configs.base import InputShape, JobConfig
+from repro.core.elastic import example_weights, mask_from_bids, weighted_mean
+from repro.data.synthetic import lm_batch
+from repro.train.train_step import init_train_state, make_train_step
+
+
+def test_example_weights_layout():
+    m = jnp.array([1.0, 0.0, 1.0, 1.0])
+    w = example_weights(m, 8)
+    np.testing.assert_array_equal(np.asarray(w),
+                                  [1, 1, 0, 0, 1, 1, 1, 1])
+
+
+def test_weighted_mean_ignores_masked():
+    v = jnp.arange(8.0)
+    w = jnp.array([1, 1, 0, 0, 1, 1, 1, 1], jnp.float32)
+    assert float(weighted_mean(v, w)) == pytest.approx(
+        np.mean([0, 1, 4, 5, 6, 7]))
+
+
+def test_mask_from_bids():
+    bids = np.array([0.9, 0.3, 0.5])
+    np.testing.assert_array_equal(mask_from_bids(bids, 0.5), [1, 0, 1])
+
+
+@pytest.mark.parametrize("arch", ["deepseek-7b", "qwen2-moe-a2.7b"])
+def test_masked_step_equals_subbatch_step(arch):
+    """Gradient with mask == gradient computed on only the active workers'
+    examples (paper Eq. 5). MoE note: routing capacity must be computed per
+    active tokens for exact equality — we use a high capacity factor here to
+    remove dropping from the comparison."""
+    cfg = ARCHS[arch].reduced()
+    if cfg.moe is not None:
+        import dataclasses
+        # high capacity removes dropping; aux-loss off because the router
+        # statistics are intentionally computed over the full (masked+active)
+        # token set — see DESIGN.md §Arch-applicability (MoE note)
+        cfg = cfg.with_(moe=dataclasses.replace(
+            cfg.moe, capacity_factor=8.0, aux_loss_weight=0.0))
+    n_workers, b, s = 4, 8, 16
+    shape = InputShape("t", seq_len=s, global_batch=b, kind="train")
+    job = JobConfig(model=cfg, shape=shape, n_workers=n_workers,
+                    learning_rate=0.1, momentum=0.0)
+    step = make_train_step(cfg, job, remat="none")
+    key = jax.random.PRNGKey(0)
+    params, opt_state = init_train_state(cfg, job, key)
+    batch = {k: jnp.asarray(v) for k, v in
+             lm_batch(cfg, b, s, 0, seed=0).items()}
+
+    mask = jnp.array([1.0, 0.0, 1.0, 0.0])
+    p_masked, _, m1 = step(params, opt_state, batch, mask,
+                           jnp.int32(0))
+
+    # same step on the physically-reduced batch of active workers
+    idx = np.concatenate([np.arange(0, 2), np.arange(4, 6)])  # workers 0,2
+    sub = {k: v[idx] for k, v in batch.items()}
+    job_sub = JobConfig(model=cfg, shape=shape, n_workers=2,
+                        learning_rate=0.1, momentum=0.0)
+    step_sub = make_train_step(cfg, job_sub, remat="none")
+    p_sub, _, m2 = step_sub(params, opt_state, sub, jnp.ones(2),
+                            jnp.int32(0))
+
+    assert float(m1["loss"]) == pytest.approx(float(m2["loss"]), rel=1e-5)
+    diffs = jax.tree.map(
+        lambda a, b_: float(jnp.max(jnp.abs(a - b_))), p_masked, p_sub)
+    assert max(jax.tree.leaves(diffs)) < 5e-5
+
+
+def test_microbatched_step_matches_full_batch():
+    """Gradient accumulation (JobConfig.microbatch) is exactly the full
+    masked mean — params after one step agree with the n_micro=1 path."""
+    cfg = ARCHS["deepseek-7b"].reduced()
+    n_workers, b, s = 4, 8, 16
+    shape = InputShape("t", seq_len=s, global_batch=b, kind="train")
+    key = jax.random.PRNGKey(0)
+    batch = {k: jnp.asarray(v) for k, v in
+             lm_batch(cfg, b, s, 0, seed=0).items()}
+    mask = jnp.array([1.0, 0.0, 1.0, 1.0])
+    outs = []
+    for micro in (1, 2, 4):
+        job = JobConfig(model=cfg, shape=shape, n_workers=n_workers,
+                        learning_rate=0.1, momentum=0.0, microbatch=micro)
+        step = make_train_step(cfg, job, remat="none")
+        params, opt_state = init_train_state(cfg, job, key)
+        p2, _, m = step(params, opt_state, batch, mask, jnp.int32(0))
+        outs.append((p2, float(m["loss"])))
+    for p2, loss in outs[1:]:
+        assert loss == pytest.approx(outs[0][1], rel=1e-5)
+        diffs = jax.tree.map(
+            lambda a, b_: float(jnp.max(jnp.abs(a - b_))), outs[0][0], p2)
+        assert max(jax.tree.leaves(diffs)) < 5e-5
+
+
+def test_all_preempted_step_is_identity_guarded():
+    cfg = ARCHS["deepseek-7b"].reduced()
+    shape = InputShape("t", seq_len=8, global_batch=4, kind="train")
+    job = JobConfig(model=cfg, shape=shape, n_workers=4, momentum=0.0)
+    step = make_train_step(cfg, job, remat="none")
+    params, opt_state = init_train_state(cfg, job, jax.random.PRNGKey(0))
+    batch = {k: jnp.asarray(v) for k, v in lm_batch(cfg, 4, 8, 0).items()}
+    p2, _, m = step(params, opt_state, batch, jnp.zeros(4), jnp.int32(0))
+    # zero active workers => zero gradient => params unchanged
+    diffs = jax.tree.map(lambda a, b_: float(jnp.max(jnp.abs(a - b_))),
+                         params, p2)
+    assert max(jax.tree.leaves(diffs)) < 1e-7

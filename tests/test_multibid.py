@@ -1,0 +1,67 @@
+"""K-level bid generalization (beyond-paper): K=2 must reproduce Theorem 3;
+K>2 must never be worse; the sim must respect the plan."""
+import numpy as np
+import pytest
+
+from repro.core import bidding, convergence as conv, multibid, preemption
+from repro.core.cost_model import RuntimeModel, UniformPrice
+
+PROB = conv.SGDProblem(alpha=0.05, c=1.0, mu=1.0, L=2.0, M=4.0, G0=10.0)
+RT = RuntimeModel(kind="exp", lam=2.0, delta=0.05)
+DIST = UniformPrice(0.2, 1.0)
+
+
+def test_inv_y_multilevel_matches_two_group():
+    for n1, n2 in ((2, 6), (4, 4), (1, 7)):
+        for gamma in (0.0, 0.4, 1.0):
+            a = multibid.inv_y_multilevel((n1, n2), np.array([1.0, gamma]))
+            b = preemption.inv_y_two_groups(n1, n1 + n2, gamma)
+            assert a == pytest.approx(b, rel=1e-12)
+
+
+def test_k2_reproduces_theorem3():
+    eps, theta, n1, n = 0.5, 500.0, 2, 8
+    J = conv.phi_inverse(PROB, eps, 1.0 / n) + 10
+    t3 = bidding.optimal_two_bids(PROB, eps, theta, n1, n, J, DIST, RT)
+    mk = multibid.optimize_multibid(PROB, eps, theta, (n1, n - n1), J, DIST,
+                                    RT)
+    assert mk.expected_cost == pytest.approx(t3.expected_cost, rel=2e-2)
+    assert mk.bid_levels[0] == pytest.approx(t3.b1, abs=2e-2)
+    assert mk.bid_levels[1] == pytest.approx(t3.b2, abs=2e-2)
+    assert mk.expected_error <= eps * (1 + 1e-6)
+    assert mk.expected_time <= theta * (1 + 1e-6)
+
+
+def test_k4_never_worse_than_k2():
+    eps, theta, n = 0.5, 500.0, 8
+    J = conv.phi_inverse(PROB, eps, 1.0 / n) + 10
+    t3 = bidding.optimal_two_bids(PROB, eps, theta, 4, n, J, DIST, RT)
+    mk = multibid.optimize_multibid(PROB, eps, theta, (2, 2, 2, 2), J, DIST,
+                                    RT)
+    assert mk.expected_cost <= t3.expected_cost * (1 + 1e-6)
+    assert mk.expected_error <= eps * (1 + 1e-6)
+    assert mk.expected_time <= theta * (1 + 1e-6)
+    # bid levels descending, within support
+    bl = np.array(mk.bid_levels)
+    assert (np.diff(bl) <= 1e-9).all()
+    assert bl.min() >= DIST.lo - 1e-9 and bl.max() <= DIST.hi + 1e-9
+
+
+def test_multibid_simulated_cost_matches_expectation():
+    from repro.sim.cluster import VolatileCluster
+    from repro.sim.spot_market import IIDPrices, SpotMarket
+
+    eps, theta, n = 0.5, 800.0, 8
+    J = conv.phi_inverse(PROB, eps, 1.0 / n) + 10
+    plan = multibid.optimize_multibid(PROB, eps, theta, (2, 3, 3), J, DIST,
+                                      RT)
+    costs = []
+    for seed in range(20):
+        cluster = VolatileCluster(
+            n_workers=n, runtime=RT,
+            market=SpotMarket(IIDPrices(DIST, seed=seed)), seed=seed,
+            idle_step=RT.expected(n))
+        for j in range(plan.J):
+            cluster.next_iteration_spot(j, plan.bids)
+        costs.append(cluster.summary()["cost"])
+    assert np.mean(costs) == pytest.approx(plan.expected_cost, rel=0.2)

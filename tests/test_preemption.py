@@ -1,0 +1,53 @@
+"""Preemption-model quantities vs Monte Carlo and closed forms (Lemma 3)."""
+import numpy as np
+
+from repro.core import preemption as pe
+
+
+def test_inv_y_binomial_vs_monte_carlo():
+    rng = np.random.default_rng(0)
+    n, q = 10, 0.45
+    draws = rng.binomial(n, 1 - q, size=300_000)
+    draws = draws[draws > 0]
+    mc = np.mean(1.0 / draws)
+    assert abs(pe.inv_y_binomial(n, q) - mc) < 3e-3
+
+
+def test_closed_form_one_over_y_plus_one():
+    """Chao & Strawderman closed form used in the Lemma 3 proof."""
+    rng = np.random.default_rng(1)
+    n, q = 12, 0.6
+    z = rng.binomial(n, 1 - q, size=300_000)
+    mc = np.mean(1.0 / (z + 1))
+    assert abs(pe.inv_y_plus_one_binomial(n, q) - mc) < 3e-3
+
+
+def test_inv_y_uniform_lemma3_rate():
+    """Lemma 3(a): E[1/y] = H_n/n ≤ O(n^{-1/2})."""
+    for n in (4, 16, 64, 256):
+        v = pe.inv_y_uniform(n)
+        assert abs(v - np.sum(1 / np.arange(1, n + 1)) / n) < 1e-12
+        assert v <= 2.0 / np.sqrt(n)
+
+
+def test_two_group_inverse_roundtrip():
+    for n1, n in ((2, 8), (4, 16), (1, 3)):
+        for gamma in (0.0, 0.3, 0.7, 1.0):
+            iy = pe.inv_y_two_groups(n1, n, gamma)
+            assert abs(pe.gamma_for_inv_y(n1, n, iy) - gamma) < 1e-12
+
+
+def test_fit_chi_recovers_exponent():
+    ns = np.array([4, 8, 16, 32, 64, 128])
+    d_true, chi_true = 1.7, 0.8
+    chi, d = pe.fit_chi(ns, d_true / ns ** chi_true)
+    assert abs(chi - chi_true) < 1e-6
+    assert abs(d - d_true) < 1e-6
+
+
+def test_binomial_inv_y_matches_chi_model():
+    """The paper's E[1/y] ≤ d/n^χ model fits the binomial with χ ≈ 1."""
+    q = 0.5
+    ns = np.array([4, 8, 16, 32, 64])
+    chi, d = pe.fit_chi(ns, [pe.inv_y_binomial(int(n), q) for n in ns])
+    assert 0.8 < chi <= 1.3

@@ -1,0 +1,133 @@
+"""Hypothesis property-based tests on system invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import convergence as conv, preemption as pe
+from repro.core.cost_model import (
+    RuntimeModel,
+    UniformPrice,
+    expected_cost_uniform_bid,
+    expected_time_uniform_bid,
+)
+from repro.core.elastic import example_weights
+from repro.models.common import rms_norm, rope
+from repro.models.moe import _dispatch_tables, _route
+
+SETT = dict(max_examples=25, deadline=None)
+
+
+@given(st.integers(1, 16), st.integers(1, 8))
+@settings(**SETT)
+def test_example_weights_sum_equals_active_examples(n_workers, per):
+    b = n_workers * per
+    rng = np.random.default_rng(n_workers * 100 + per)
+    mask = (rng.uniform(size=n_workers) > 0.5).astype(np.float32)
+    w = example_weights(jnp.asarray(mask), b)
+    assert float(w.sum()) == mask.sum() * per
+
+
+@given(st.floats(0.01, 0.2), st.floats(0.1, 5.0), st.floats(1.0, 50.0),
+       st.floats(0.1, 20.0))
+@settings(**SETT)
+def test_error_bound_monotone_in_inv_y_and_j(alpha_frac, c, g0, m):
+    l_smooth = c * 4
+    alpha = alpha_frac / (l_smooth)
+    prob = conv.SGDProblem(alpha=alpha, c=c, mu=1.0, L=l_smooth, M=m, G0=g0)
+    b1 = conv.error_bound_static(prob, 50, 0.1)
+    b2 = conv.error_bound_static(prob, 50, 0.2)
+    assert b1 <= b2 + 1e-12           # more workers (smaller E[1/y]) better
+    b3 = conv.error_bound_static(prob, 100, 0.1)
+    assert b3 <= b1 + 1e-12           # more iterations better
+
+
+@given(st.integers(1, 30), st.floats(0.05, 0.95))
+@settings(**SETT)
+def test_inv_y_bounds(n, q):
+    v = pe.inv_y_binomial(n, q)
+    assert 1.0 / n - 1e-12 <= v <= 1.0 + 1e-12
+
+
+@given(st.floats(0.25, 1.0), st.floats(0.25, 1.0))
+@settings(**SETT)
+def test_cost_and_time_monotone_in_bid(b1, b2):
+    dist = UniformPrice(0.2, 1.0)
+    rt = RuntimeModel(kind="det", r_const=1.0)
+    lo, hi = sorted((b1, b2))
+    if hi - lo < 1e-6:
+        return
+    assert expected_cost_uniform_bid(10, 4, lo, dist, rt) <= \
+        expected_cost_uniform_bid(10, 4, hi, dist, rt) + 1e-9
+    assert expected_time_uniform_bid(10, 4, lo, dist, rt) >= \
+        expected_time_uniform_bid(10, 4, hi, dist, rt) - 1e-9
+
+
+@given(st.integers(2, 64), st.integers(8, 64), st.integers(1, 4))
+@settings(**SETT)
+def test_rope_preserves_norm(d_half, s, b):
+    d = d_half * 2
+    key = jax.random.PRNGKey(d + s)
+    x = jax.random.normal(key, (b, s, 2, d))
+    pos = jnp.broadcast_to(jnp.arange(s), (b, s))
+    y = rope(x, pos, 10000.0)
+    np.testing.assert_allclose(
+        np.linalg.norm(np.asarray(x), axis=-1),
+        np.linalg.norm(np.asarray(y), axis=-1), rtol=1e-4)
+
+
+@given(st.integers(1, 4), st.integers(2, 64))
+@settings(**SETT)
+def test_rms_norm_unit_rms(b, d):
+    key = jax.random.PRNGKey(b * 1000 + d)
+    x = jax.random.normal(key, (b, d)) * 7 + 3
+    y = rms_norm(x, jnp.ones(d), eps=1e-6)
+    rms = np.sqrt(np.mean(np.asarray(y, np.float64) ** 2, axis=-1))
+    np.testing.assert_allclose(rms, 1.0, atol=1e-2)
+
+
+@given(st.integers(4, 64), st.integers(2, 8), st.integers(1, 3),
+       st.integers(1, 12))
+@settings(**SETT)
+def test_moe_dispatch_tables_invariants(t, e, k, cap):
+    k = min(k, e)
+    key = jax.random.PRNGKey(t * 7 + e)
+    # top_k always returns distinct experts per token — mirror that
+    scores = jax.random.normal(key, (t, e))
+    _, topi = jax.lax.top_k(scores, k)
+    topv = jax.nn.softmax(jax.random.normal(jax.random.fold_in(key, 1),
+                                            (t, k)))
+    tok_tbl, cmb_tbl, val_tbl = _dispatch_tables(topi, topv, e, cap)
+    tok, cmb, val = (np.asarray(a) for a in (tok_tbl, cmb_tbl, val_tbl))
+    # valid slots hold real token ids; combine weights are in (0, 1]
+    assert tok.shape == (e, cap)
+    assert ((tok >= 0) & (tok < t)).all()
+    assert (cmb[val] > 0).all() and (cmb <= 1.0 + 1e-6).all()
+    assert (cmb[~val] == 0).all()
+    # no token appears more than once within one expert's capacity slots
+    for ei in range(e):
+        ids = tok[ei][val[ei]]
+        assert len(set(ids.tolist())) == len(ids)
+    # per-expert valid count ≤ min(capacity, assignments to that expert)
+    flat = np.asarray(topi).reshape(-1)
+    for ei in range(e):
+        assert val[ei].sum() == min(cap, int((flat == ei).sum()))
+
+
+@given(st.integers(2, 6))
+@settings(**SETT)
+def test_router_padded_experts_get_no_traffic(e_real):
+    import dataclasses
+
+    from repro.configs import ARCHS
+    cfg = ARCHS["qwen2-moe-a2.7b"].reduced()
+    m = dataclasses.replace(cfg.moe, num_experts=8,
+                            num_experts_unpadded=e_real, top_k=2)
+    key = jax.random.PRNGKey(e_real)
+    x = jax.random.normal(key, (16, cfg.d_model))
+    router = jax.random.normal(jax.random.fold_in(key, 1),
+                               (cfg.d_model, 8))
+    topi, topv, aux = _route(x, router, m)
+    assert int(jnp.max(topi)) < e_real
+    assert bool(jnp.isfinite(aux))

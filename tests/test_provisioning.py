@@ -1,0 +1,73 @@
+"""Theorems 4–5: provisioning optima vs brute force, η feasibility."""
+import numpy as np
+import pytest
+
+from repro.core import convergence as conv, provisioning as prov
+
+PROB = conv.SGDProblem(alpha=0.05, c=1.0, mu=1.0, L=2.0, M=4.0, G0=10.0)
+
+
+def test_theorem4_matches_brute_force():
+    eps, theta_iters, d = 0.5, 500, 1.0
+    plan = prov.optimal_n_and_j(PROB, eps, theta_iters, d)
+    beta, A, B = PROB.beta, PROB.G0, PROB.B * d
+    best = None
+    for J in range(1, theta_iters + 1):
+        denom = (1 - beta) * (eps - A * beta ** J)
+        if denom <= 0:
+            continue
+        n = int(np.ceil(B * (1 - beta ** J) / denom))
+        if best is None or J * n < best[0] * best[1]:
+            best = (J, n)
+    assert plan.cost_proxy <= best[0] * best[1] * (1 + 1e-9)
+    assert plan.expected_error <= eps * (1 + 1e-9)
+
+
+def test_theorem4_respects_deadline():
+    plan = prov.optimal_n_and_j(PROB, 0.5, 70, 1.0)
+    assert plan.J <= 70
+
+
+def test_theorem4_infeasible_raises():
+    with pytest.raises(ValueError):
+        prov.optimal_n_and_j(PROB, 1e-9, 10, 1.0)
+
+
+def test_optimize_eta_smallest_feasible():
+    # J must be large enough that β^J·G0 alone is below ε (else no η helps)
+    eps, theta, n0, J = 0.3, 500.0, 2, 120
+    eta = prov.optimize_eta(PROB, eps, theta, n0, J, chi=1.0, d=1.0, q=0.5,
+                            R=1.0)
+    assert eta ** 1.0 > 1 / PROB.beta            # constraint (23)
+    assert prov.dynamic_error_bound(PROB, J, n0, eta, 1.0, 1.0) <= eps * (
+        1 + 1e-6)
+    # smaller η in the feasible direction must violate a constraint
+    eta_lo = (1 / PROB.beta) + 1e-9
+    if eta - 1e-3 > eta_lo:
+        smaller = eta - 1e-3
+        ok_err = prov.dynamic_error_bound(PROB, J, n0, smaller, 1.0,
+                                          1.0) <= eps
+        ok_time = prov.dynamic_time(J, n0, smaller, 0.5, 1.0) <= theta
+        assert not (ok_err and ok_time)
+
+
+def test_dynamic_schedule_monotone_and_costed():
+    sched = prov.dynamic_schedule(2, 1.1, 30)
+    assert (np.diff(sched) >= 0).all()
+    assert prov.dynamic_cost_proxy(2, 1.1, 30) == pytest.approx(
+        2 * (1.1 ** 30 - 1) / 0.1, rel=1e-12)
+
+
+def test_co_optimize_eta_and_j_feasible():
+    J, eta, cost = prov.co_optimize_eta_and_j(PROB, 0.4, 200.0, 2, chi=1.0,
+                                              d=1.0, q=0.5, R=1.0, j_max=120)
+    assert prov.dynamic_error_bound(PROB, J, 2, eta, 1.0, 1.0) <= 0.4 * (
+        1 + 1e-6)
+    assert prov.dynamic_time(J, 2, eta, 0.5, 1.0) <= 200.0 * (1 + 1e-6)
+
+
+def test_theorem5_log_iterations():
+    for J in (100, 1000, 10000):
+        Jp = conv.dynamic_iterations(J, 1.5, 1.0)
+        assert Jp <= int(np.ceil(np.log(1 + 0.5 * J) / np.log(1.5))) + 1
+        assert Jp < J

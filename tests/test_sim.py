@@ -1,0 +1,76 @@
+"""Spot-market and cluster-simulator semantics."""
+import numpy as np
+import pytest
+
+from repro.core.cost_model import RuntimeModel, UniformPrice
+from repro.sim.cluster import VolatileCluster
+from repro.sim.spot_market import (
+    IIDPrices,
+    SpotMarket,
+    TracePrices,
+    synthetic_history,
+)
+
+
+def test_market_active_iff_bid_covers_price():
+    market = SpotMarket(IIDPrices(UniformPrice(0.2, 1.0), seed=0))
+    bids = np.array([0.25, 0.6, 1.0])
+    for t in range(200):
+        price, active = market.step(float(t), bids)
+        np.testing.assert_array_equal(active, (bids >= price - 1e-12))
+
+
+def test_workers_pay_price_not_bid():
+    rt = RuntimeModel(kind="det", r_const=1.0)
+    dist = UniformPrice(0.2, 1.0)
+    cluster = VolatileCluster(n_workers=2, runtime=rt,
+                              market=SpotMarket(IIDPrices(dist, seed=1)),
+                              seed=1)
+    bids = np.array([1.0, 1.0])       # never preempted
+    for j in range(50):
+        cluster.next_iteration_spot(j, bids)
+    prices = np.array([r.price for r in cluster.records])
+    costs = np.array([r.cost for r in cluster.records])
+    np.testing.assert_allclose(costs, 2 * prices * 1.0, rtol=1e-12)
+    assert prices.max() <= 1.0 and prices.min() >= 0.2
+
+
+def test_idle_time_accumulates_when_bids_too_low():
+    rt = RuntimeModel(kind="det", r_const=1.0)
+    dist = UniformPrice(0.2, 1.0)
+    cluster = VolatileCluster(n_workers=1, runtime=rt,
+                              market=SpotMarket(IIDPrices(dist, seed=2)),
+                              seed=2, idle_step=0.5)
+    bids = np.array([0.3])            # active w.p. 0.125 per redraw
+    for j in range(20):
+        cluster.next_iteration_spot(j, bids)
+    assert cluster.total_idle > 0
+    s = cluster.summary()
+    assert s["time"] == pytest.approx(20 * 1.0 + cluster.total_idle)
+
+
+def test_preemptible_mode_counts_and_idle():
+    rt = RuntimeModel(kind="det", r_const=1.0)
+    cluster = VolatileCluster(n_workers=8, runtime=rt, preempt_q=0.5,
+                              on_demand_price=0.7, seed=3)
+    ys = []
+    for j in range(300):
+        mask = cluster.next_iteration_preemptible(j, 8)
+        y = int(mask.sum())
+        assert y >= 1
+        ys.append(y)
+    assert 8 * 0.5 * 0.8 < np.mean(ys) < 8 * 0.5 * 1.2
+    assert cluster.total_cost == pytest.approx(0.7 * np.sum(ys), rel=1e-9)
+
+
+def test_synthetic_history_properties():
+    tr = synthetic_history(hours=24 * 7, seed=0)
+    assert tr.min() >= 0.068 - 1e-9 and tr.max() <= 0.20 + 1e-9
+    # non-i.i.d.: strong lag-1 autocorrelation
+    ac = np.corrcoef(tr[:-1], tr[1:])[0, 1]
+    assert ac > 0.8
+    proc = TracePrices(tr, step=0.1)
+    assert proc.price(0.0) == tr[0]
+    assert proc.price(0.25) == tr[2]
+    d = proc.empirical_dist()
+    assert d.lo >= 0.0679 - 1e-3
