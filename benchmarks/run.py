@@ -2,11 +2,14 @@
 and step-microbenchmarks. Prints ``name,us_per_call,derived`` CSV rows.
 
   fig3  — strategies under synthetic i.i.d. prices (uniform & Gaussian):
-          cost to reach the target error (paper Fig. 3).
+          cost to reach the target error, mean ± 95% CI over 8 seeds on the
+          batched engine (paper Fig. 3).
   fig4  — strategies under the non-i.i.d. synthetic historical trace
-          (paper Fig. 4; cost reduction % vs No-interruptions).
+          (paper Fig. 4; cost reduction % vs No-interruptions), 8 seeds.
   fig5a — Theorem-4 worker count vs naive choices (accuracy per dollar).
   fig5b — Theorem-5 dynamic workers vs static (accuracy per dollar).
+  scenarios — vectorized engine vs legacy per-scenario loop throughput on a
+          64-scenario fig3-style grid (scenarios/sec, speedup).
   roofline — per (arch × shape) dominant roofline term from the dry-run
           JSON (results/dryrun_singlepod.json), if present.
   steps — wall-time microbenchmarks of the elastic train/serve steps on
@@ -63,32 +66,18 @@ def _strategies(prob, eps, theta, n, dist, rt):
     return out
 
 
-def _pad_strategy(s, n, floor):
-    """Pad a strategy whose fleet is smaller than n with never-active bids."""
-
-    class _P:
-        total_iterations = s.total_iterations
-        name = s.name
-
-        @staticmethod
-        def bids(t, j):
-            b = s.bids(t, j)
-            return np.pad(b, (0, n - len(b)), constant_values=floor - 1.0) \
-                if len(b) < n else b
-
-    return _P
-
-
-def _bench_prices(tag, dist, make_market, reps=5):
+def _calibration(dist):
+    """Shared fig3/fig4 planning calibration (ε above the Theorem-1 noise
+    floor, 3×-slack deadline). Returns (quad, w0, prob, rt, strategies,
+    eps_emp, n)."""
+    from repro.core import convergence as conv
     from repro.core.cost_model import RuntimeModel
-    from repro.sim.evaluate import average_runs, run_spot_strategy
 
     quad, w0, prob = _problem()
     rt = RuntimeModel(kind="exp", lam=2.0, delta=0.05)
     n = 8
     # plan against the Theorem-1 bound: ε must sit above the noise floor
     # κ(n) = B/(1−β)/n even for the smallest intermediate fleet (n/4)
-    from repro.core import convergence as conv
     floor = prob.B / (1 - prob.beta)
     eps = 5.0 * floor / n
     j_min = conv.phi_inverse(prob, eps, 1.0 / n)
@@ -96,26 +85,39 @@ def _bench_prices(tag, dist, make_market, reps=5):
     strategies = _strategies(prob, eps, theta, n, dist, rt)
     # the bound is conservative: measure cost at an *empirical* error level
     # every strategy reaches (the paper measures accuracy targets likewise)
-    eps_emp = eps / 4
+    return quad, w0, prob, rt, strategies, eps / 4, n
 
+
+N_SEEDS = 8          # per-point seeds for the mean ± 95%-CI summaries
+
+
+def _timed(fn):
+    """(result, µs) of the *second* call — the first pays jit compilation,
+    so the reported wall time is steady-state engine throughput."""
+    fn()
+    t0 = time.time()
+    out = fn()
+    return out, (time.time() - t0) * 1e6
+
+
+def _emit_spot_grid(tag, bres, strategies, eps_emp, wall_us_per_scenario):
+    """Per-strategy rows (cost-to-error mean ± CI over seeds) plus the
+    vs-dynamic / vs-no-interruptions comparisons on the means."""
     results = {}
     for name, s in strategies.items():
-        t0 = time.time()
-        padded = _pad_strategy(s, n, dist.lo)
-        run = average_runs(
-            lambda seed, p=padded: run_spot_strategy(
-                quad, w0, prob.alpha, p, make_market(seed), rt, batch=16,
-                seed=seed),
-            reps)
-        dt_us = (time.time() - t0) * 1e6 / reps
-        cost = run.cost_to_error(eps_emp)
-        if not np.isfinite(cost):
-            cost = float(run.costs[-1])   # never reached: report full cost
+        label = f"{name}@{tag}"
+        run = bres.run(label)
+        cost, ci, per_seed = bres.cost_to_error(label, eps_emp)
+        if not np.isfinite(cost):   # never reached: report full mean cost
+            cost, ci = run.summary["cost_mean"], run.summary["cost_ci"]
         results[name] = cost
-        emit(f"{tag}_{name}", dt_us,
-             f"J={s.total_iterations};cost_to_emp={cost:.2f};"
-             f"time_total={run.times[-1]:.1f};"
-             f"final_err={run.errors[-1]:.4f}")
+        emit(f"{tag}_{name}", wall_us_per_scenario,
+             f"J={s.total_iterations};seeds={bres.n_seeds};"
+             f"cost_to_emp={cost:.2f};cost_to_emp_ci={ci:.2f};"
+             f"time_total={run.summary['time_mean']:.1f}"
+             f"±{run.summary['time_ci']:.1f};"
+             f"final_err={run.summary['final_err_mean']:.4f}"
+             f"±{run.summary['final_err_ci']:.4f}")
     ref = results.get("dynamic-bids") or min(results.values())
     for name, cost in results.items():
         if name != "dynamic-bids" and np.isfinite(cost) and ref > 0:
@@ -129,27 +131,42 @@ def _bench_prices(tag, dist, make_market, reps=5):
 
 
 def bench_fig3():
+    """Strategies × synthetic i.i.d. price dists, one jitted engine call per
+    distribution, N_SEEDS seeds per point."""
     from repro.core.cost_model import TruncGaussianPrice, UniformPrice
-    from repro.sim.spot_market import IIDPrices, SpotMarket
+    from repro.sim.evaluate import evaluate_batch
 
     for tag, dist in [("fig3_uniform", UniformPrice(0.2, 1.0)),
                       ("fig3_gaussian",
                        TruncGaussianPrice(0.6, 0.175, 0.2, 1.0))]:
-        _bench_prices(tag, dist,
-                      lambda seed, d=dist: SpotMarket(IIDPrices(d,
-                                                                seed=seed)))
+        quad, w0, prob, rt, strategies, eps_emp, n = _calibration(dist)
+        bres, us = _timed(lambda: evaluate_batch(
+            strategies, {tag: dist}, N_SEEDS, quad=quad, w0=w0,
+            alpha=prob.alpha, rt=rt, batch=16, n_max=n))
+        _emit_spot_grid(tag, bres, strategies, eps_emp,
+                        us / bres.n_scenarios)
 
 
 def bench_fig4():
-    from repro.sim.spot_market import SpotMarket, TracePrices, \
-        synthetic_history
+    """Strategies under the non-i.i.d. synthetic historical trace: planning
+    sees the empirical F̂, the market replays the raw trace (one entry per
+    tick, per-seed tick offsets standing in for np.roll)."""
+    from repro.sim import engine
+    from repro.sim.evaluate import evaluate_batch
+    from repro.sim.spot_market import TracePrices, synthetic_history
 
     trace = synthetic_history(hours=24 * 30, seed=0)
-    proc = TracePrices(trace, step=0.05)
-    dist = proc.empirical_dist()
-    _bench_prices("fig4_trace", dist,
-                  lambda seed: SpotMarket(TracePrices(
-                      np.roll(trace, seed * 1013), step=0.05)))
+    dist = TracePrices(trace, step=0.05).empirical_dist()
+    quad, w0, prob, rt, strategies, eps_emp, n = _calibration(dist)
+    tag = "fig4_trace"
+    spec = engine.PriceSpec.from_trace(trace)
+    scenarios = [engine.scenario_from_strategy(
+        s, alpha=prob.alpha, rt=rt, n_max=n, price_spec=spec,
+        name=f"{name}@{tag}") for name, s in strategies.items()]
+    bres, us = _timed(lambda: evaluate_batch(
+        strategies, scenarios, N_SEEDS, quad=quad, w0=w0, alpha=prob.alpha,
+        rt=rt, batch=16))
+    _emit_spot_grid(tag, bres, strategies, eps_emp, us / bres.n_scenarios)
 
 
 def _problem5():
@@ -166,7 +183,7 @@ def bench_fig5a():
     from repro.core import provisioning as prov
     from repro.core import strategies as strat
     from repro.core.cost_model import RuntimeModel
-    from repro.sim.evaluate import average_runs, run_preemptible_strategy
+    from repro.sim.evaluate import evaluate_batch
 
     quad, w0, prob = _problem5()
     rt = RuntimeModel(kind="det", r_const=1.0)
@@ -182,25 +199,26 @@ def bench_fig5a():
     }
     # measure cost to an empirical error between the n and n/2 floors
     eps_emp = 0.02
+    bres, us = _timed(lambda: evaluate_batch(
+        choices, {"q": None}, N_SEEDS, quad=quad, w0=w0, alpha=prob.alpha,
+        rt=rt, q=q, on_demand_price=0.5, batch=1, idle_step=0.1))
+    wall = us / bres.n_scenarios
     for name, s in choices.items():
-        t0 = time.time()
-        run = average_runs(lambda seed, s=s: run_preemptible_strategy(
-            quad, w0, prob.alpha, s, q, rt, price=0.5, seed=seed,
-            batch=1), 5)
-        dt_us = (time.time() - t0) * 1e6 / 5
-        cost = run.cost_to_error(eps_emp)
-        emit(f"fig5a_{name}", dt_us,
-             f"n={s.workers(0)};J={s.total_iterations};"
-             f"final_err={run.errors[-1]:.4f};"
-             f"cost_to_emp={cost if np.isfinite(cost) else 'never'};"
-             f"cost_total={run.costs[-1]:.1f}")
+        run = bres.run(f"{name}@q")
+        cost, ci, _ = bres.cost_to_error(f"{name}@q", eps_emp)
+        emit(f"fig5a_{name}", wall,
+             f"n={s.workers(0)};J={s.total_iterations};seeds={bres.n_seeds};"
+             f"final_err={run.summary['final_err_mean']:.4f}"
+             f"±{run.summary['final_err_ci']:.4f};"
+             f"cost_to_emp={f'{cost:.1f}±{ci:.1f}' if np.isfinite(cost) else 'never'};"
+             f"cost_total={run.summary['cost_mean']:.1f}")
 
 
 def bench_fig5b():
     from repro.core import convergence as conv
     from repro.core import strategies as strat
     from repro.core.cost_model import RuntimeModel
-    from repro.sim.evaluate import average_runs, run_preemptible_strategy
+    from repro.sim.evaluate import evaluate_batch
 
     quad, w0, prob = _problem5()
     rt = RuntimeModel(kind="det", r_const=1.0)
@@ -213,18 +231,86 @@ def bench_fig5b():
         "static_n1": strat.DynamicWorkers(n0=1, eta=1.0, J=J_static),
         "dynamic_eta": strat.DynamicWorkers(n0=n0, eta=eta, J=Jp),
     }
+    bres, us = _timed(lambda: evaluate_batch(
+        runs, {"q": None}, N_SEEDS, quad=quad, w0=w0, alpha=prob.alpha,
+        rt=rt, q=q, on_demand_price=0.5, batch=1, idle_step=0.1))
+    wall = us / bres.n_scenarios
     for name, s in runs.items():
-        t0 = time.time()
-        run = average_runs(lambda seed, s=s: run_preemptible_strategy(
-            quad, w0, prob.alpha, s, q, rt, price=0.5, seed=seed,
-            batch=1), 5)
-        dt_us = (time.time() - t0) * 1e6 / 5
-        err = max(float(np.mean(run.errors[-20:])), 1e-9)
-        acc_per_dollar = (1.0 / err) / max(run.costs[-1], 1e-9)
-        emit(f"fig5b_{name}", dt_us,
-             f"J={s.total_iterations};final_err={err:.4f};"
-             f"cost={run.costs[-1]:.1f};"
+        run = bres.run(f"{name}@q")
+        i = bres.index(f"{name}@q")
+        J_s = int(bres.result.J[i])
+        # per-seed tail error; NaN-safe end to end so an incomplete seed is
+        # dropped rather than poisoning the row
+        errs = np.nanmean(bres.result.errors[i, :, max(J_s - 20, 0):J_s],
+                          axis=-1)
+        n_ok = max(int(np.sum(~np.isnan(errs))), 1)
+        err, err_ci = float(np.nanmean(errs)), float(
+            1.96 * np.nanstd(errs) / np.sqrt(n_ok))
+        err = max(err, 1e-9)
+        cost = run.summary["cost_mean"]
+        acc_per_dollar = (1.0 / err) / max(cost, 1e-9)
+        emit(f"fig5b_{name}", wall,
+             f"J={s.total_iterations};seeds={bres.n_seeds};"
+             f"final_err={err:.4f}±{err_ci:.4f};cost={cost:.1f};"
              f"inv_err_per_dollar={acc_per_dollar:.4f}")
+
+
+def bench_scenarios():
+    """Engine vs legacy-loop throughput on a 64-scenario fig3-style grid
+    (16 bid levels × 2 price dists × 2 fleet sizes, exact gradient so both
+    paths do identical math). Reports scenarios/sec and the speedup."""
+    from repro.core import bidding, strategies as strat
+    from repro.core.cost_model import (RuntimeModel, TruncGaussianPrice,
+                                       UniformPrice)
+    from repro.data.synthetic import QuadraticProblem
+    from repro.sim import engine
+    from repro.sim.evaluate import run_spot_strategy
+    from repro.sim.spot_market import IIDPrices, SpotMarket
+
+    quad = QuadraticProblem(dim=10, n_samples=256, cond=8.0, noise=0.3,
+                            seed=0)
+    w0 = quad.w_star + 2.0 * np.ones(quad.dim) / np.sqrt(quad.dim)
+    alpha = 0.5 / quad.L
+    rt = RuntimeModel(kind="exp", lam=2.0, delta=0.05)
+    J = 60
+    dists = [UniformPrice(0.2, 1.0), TruncGaussianPrice(0.6, 0.175, 0.2,
+                                                        1.0)]
+    grid = [(b, dist, n) for b in np.linspace(0.45, 1.0, 16)
+            for dist in dists for n in (2, 4)]
+
+    def fixed(b, n):
+        return strat.FixedBids(bidding.BidPlan(
+            n=n, n1=n, b1=float(b), b2=float(b), J=J, expected_cost=0,
+            expected_time=0, expected_error=0))
+
+    scenarios = [engine.scenario_from_strategy(
+        fixed(b, n), alpha=alpha, rt=rt, dist=dist, n_max=4,
+        name=f"b{b:.2f}_n{n}") for b, dist, n in grid]
+    # tick budget covers the lowest-F(b) gaussian cell (F≈0.18 → ~6J ticks)
+    cfg = engine.SimConfig(n_ticks=8 * J, grad="full")
+
+    # engine: warm-up compiles, second call measures steady-state
+    engine.simulate(scenarios, quad, w0, 1, cfg)
+    t0 = time.time()
+    res = engine.simulate(scenarios, quad, w0, 1, cfg)
+    dt_engine = time.time() - t0
+    eng_rate = len(grid) / dt_engine
+
+    t0 = time.time()
+    for i, (b, dist, n) in enumerate(grid):
+        run_spot_strategy(quad, w0, alpha, fixed(b, n),
+                          SpotMarket(IIDPrices(dist, seed=i)), rt,
+                          grad="full", seed=i)
+    dt_legacy = time.time() - t0
+    leg_rate = len(grid) / dt_legacy
+
+    emit("scenarios_engine", dt_engine * 1e6 / len(grid),
+         f"scenarios={len(grid)};scenarios_per_sec={eng_rate:.1f};"
+         f"completed={float(res.completed.mean()):.2f}")
+    emit("scenarios_legacy", dt_legacy * 1e6 / len(grid),
+         f"scenarios={len(grid)};scenarios_per_sec={leg_rate:.1f}")
+    emit("scenarios_speedup", 0.0,
+         f"engine_vs_legacy={eng_rate / leg_rate:.1f}x")
 
 
 def bench_roofline():
@@ -323,6 +409,7 @@ BENCHES = {
     "fig4": bench_fig4,
     "fig5a": bench_fig5a,
     "fig5b": bench_fig5b,
+    "scenarios": bench_scenarios,
     "roofline": bench_roofline,
     "steps": bench_steps,
     "kernels": bench_kernels,
@@ -335,6 +422,10 @@ def main() -> None:
                     help="comma-separated subset of: " + ",".join(BENCHES))
     args = ap.parse_args()
     names = args.only.split(",") if args.only else list(BENCHES)
+    unknown = [n for n in names if n not in BENCHES]
+    if unknown:
+        ap.error(f"unknown benchmark(s) {','.join(unknown)}; "
+                 f"choose from {','.join(BENCHES)}")
     print("name,us_per_call,derived")
     for n in names:
         BENCHES[n]()

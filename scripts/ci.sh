@@ -1,0 +1,32 @@
+#!/usr/bin/env bash
+# Tier-1 CI: fast test suite + a 5-scenario engine smoke sweep.
+# Run from anywhere: scripts/ci.sh
+set -euo pipefail
+cd "$(dirname "$0")/.."
+export PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH}
+
+echo "== tier-1 tests (excluding slow) =="
+python -m pytest -x -q -m "not slow"
+
+echo "== engine smoke sweep (5 scenarios x 2 seeds) =="
+python - <<'PY'
+import numpy as np
+from repro.data.synthetic import QuadraticProblem
+from repro.sim import engine
+
+quad = QuadraticProblem(dim=6, n_samples=64, cond=5.0, noise=0.2, seed=0)
+w0 = quad.w_star + 1.0
+alpha = 0.4 / quad.L
+scenarios = [engine.Scenario(
+    price=engine.PriceSpec.uniform(0.2, 1.0), alpha=alpha,
+    bid_schedule=np.tile([b, b, b], (40, 1)), rt_kind="exp", rt_lam=2.0,
+    idle_step=0.5, name=f"b={b}") for b in [0.5, 0.6, 0.7, 0.85, 1.0]]
+res = engine.simulate(scenarios, quad, w0, 2,
+                      engine.SimConfig(n_ticks=250, batch=4))
+assert res.completed.all(), "smoke sweep failed to complete"
+assert np.isfinite(res.total_cost).all()
+print("smoke sweep OK:",
+      [f"{s.name}:cost={c:.1f}" for s, c in
+       zip(scenarios, res.total_cost.mean(axis=1))])
+PY
+echo "CI OK"

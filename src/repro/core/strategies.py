@@ -22,6 +22,18 @@ from repro.core import bidding, convergence as conv, provisioning
 from repro.core.cost_model import PriceDist, RuntimeModel
 
 
+#: Pad value for absent workers in stacked bid schedules (never active).
+NEVER_BID = -np.inf
+
+
+def _pad_bids(bids: np.ndarray, n_max: Optional[int]) -> np.ndarray:
+    bids = np.asarray(bids, float)
+    if n_max is not None and len(bids) < n_max:
+        bids = np.pad(bids, (0, n_max - len(bids)),
+                      constant_values=NEVER_BID)
+    return bids
+
+
 class Strategy:
     name: str = "base"
 
@@ -36,6 +48,24 @@ class Strategy:
     def total_iterations(self) -> int:
         raise NotImplementedError
 
+    # ------------------------------------------------ batchable plan params
+
+    def bid_schedule(self, J: Optional[int] = None,
+                     n_max: Optional[int] = None) -> np.ndarray:
+        """Stacked per-iteration bids, shape (J, n_max) — the batchable form
+        consumed by `repro.sim.engine`. Time-dependent strategies resolve
+        elapsed time with its *expected* value (the engine cannot call back
+        into Python mid-scan); the legacy loop remains the exact-semantics
+        path. Rows are padded to ``n_max`` with NEVER_BID."""
+        J = J or self.total_iterations
+        return np.stack([_pad_bids(self.bids(0.0, j), n_max)
+                         for j in range(J)])
+
+    def worker_schedule(self, J: Optional[int] = None) -> np.ndarray:
+        """Provisioned worker counts per iteration, shape (J,)."""
+        J = J or self.total_iterations
+        return np.array([self.workers(j) for j in range(J)], np.int64)
+
 
 @dataclasses.dataclass
 class FixedBids(Strategy):
@@ -48,6 +78,10 @@ class FixedBids(Strategy):
     @property
     def total_iterations(self):
         return self.plan_.J
+
+    def bid_schedule(self, J=None, n_max=None):
+        J = J or self.total_iterations
+        return np.tile(_pad_bids(self.plan_.bids, n_max), (J, 1))
 
 
 def no_interruptions(prob, eps, n, dist, rt) -> FixedBids:
@@ -92,22 +126,46 @@ class DynamicBids(Strategy):
     def total_iterations(self):
         return self._plan1.J
 
+    def _replan(self, theta_left: float, j_left: int) -> bidding.BidPlan:
+        """Re-optimize the two bids for the enlarged fleet on the remaining
+        (ε, θ) budget, falling back to never-preempted bidding when the
+        leftover deadline is infeasible."""
+        n1p, np_ = self.stage2
+        try:
+            return bidding.optimal_two_bids(
+                self.prob, self.eps, max(theta_left, 1e-6), n1p, np_,
+                max(j_left, 1), self.dist, self.rt)
+        except ValueError:
+            return bidding.no_interruption_bid(
+                self.prob, self.eps, np_, self.dist, self.rt)
+
     def bids(self, t_elapsed, j_done):
         if j_done < self.switch_at:
             return self._plan1.bids
         if self._plan2 is None:
-            n1p, np_ = self.stage2
-            theta_left = max(self.theta - t_elapsed, 1e-6)
-            j_left = max(self._plan1.J - j_done, 1)
-            # re-optimize bids for the enlarged fleet on the remaining budget
-            try:
-                self._plan2 = bidding.optimal_two_bids(
-                    self.prob, self.eps, theta_left, n1p, np_, j_left,
-                    self.dist, self.rt)
-            except ValueError:
-                self._plan2 = bidding.no_interruption_bid(
-                    self.prob, self.eps, np_, self.dist, self.rt)
+            self._plan2 = self._replan(self.theta - t_elapsed,
+                                       self._plan1.J - j_done)
         return self._plan2.bids
+
+    def _stage2_plan_expected(self) -> bidding.BidPlan:
+        """Stage-2 plan with elapsed time resolved at its expectation
+        (E[τ₁]·switch_at/J₁) — the batchable approximation of the legacy
+        path, which replans on the *actual* clock."""
+        t_expected = self._plan1.expected_time * self.switch_at \
+            / max(self._plan1.J, 1)
+        return self._replan(self.theta - t_expected,
+                            self._plan1.J - self.switch_at)
+
+    def bid_schedule(self, J=None, n_max=None):
+        J = J or self.total_iterations
+        plan2 = self._stage2_plan_expected()
+        # both stages pad to the widest fleet, whatever n_max was requested
+        n_max = max(n_max or 0, self._plan1.n, plan2.n)
+        rows1 = np.tile(_pad_bids(self._plan1.bids, n_max),
+                        (min(self.switch_at, J), 1))
+        rows2 = np.tile(_pad_bids(plan2.bids, n_max),
+                        (max(J - self.switch_at, 0), 1))
+        return np.concatenate([rows1, rows2])[:J]
 
 
 @dataclasses.dataclass

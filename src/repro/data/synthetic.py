@@ -105,6 +105,16 @@ class QuadraticProblem:
         r = np.einsum("sij,j->si", self.A, w) - self.b
         return float(0.5 * np.mean(np.sum(r * r, axis=1)))
 
+    def full_grad(self, w: np.ndarray) -> np.ndarray:
+        """Exact ∇G(w) = H(w − w*) — the deterministic-gradient mode used
+        for engine/legacy parity checks and throughput benchmarks."""
+        return self.H @ (w - self.w_star)
+
+    def error(self, w: np.ndarray) -> float:
+        """G(w) − G* via the exact quadratic form (no residual pass)."""
+        d = w - self.w_star
+        return float(0.5 * d @ (self.H @ d))
+
     def grad_minibatch(self, w: np.ndarray, rng: np.random.Generator,
                        batch: int) -> np.ndarray:
         idx = rng.integers(0, self.n_samples, size=batch)

@@ -174,7 +174,8 @@ def lower_one(arch: str, shape_name: str, *, multi_pod: bool = False,
     mem = compiled.memory_analysis()
     print(f"== {arch} × {shape_name} mesh={record['mesh']} ==")
     print(f"memory_analysis: {mem}")
-    ca = compiled.cost_analysis()
+    from repro.roofline.analysis import xla_cost_analysis
+    ca = xla_cost_analysis(compiled)
     print("cost_analysis: flops={:.3e} bytes={:.3e}".format(
         ca.get("flops", -1.0), ca.get("bytes accessed", -1.0)))
     print(json.dumps({k: v for k, v in record.items()

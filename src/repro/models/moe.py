@@ -35,6 +35,14 @@ try:  # jax >= 0.6
 except AttributeError:  # pragma: no cover
     from jax.experimental.shard_map import shard_map
 
+import inspect
+
+# the "don't check replication" kwarg was renamed check_rep → check_vma
+_SHMAP_NO_CHECK = (
+    {"check_vma": False}
+    if "check_vma" in inspect.signature(shard_map).parameters
+    else {"check_rep": False})
+
 
 def moe_defs(cfg):
     m = cfg.moe
@@ -136,7 +144,6 @@ def _moe_device_a2a(x, p, cfg, e_local: int, tp_axis: str):
     m = cfg.moe
     b, s, d = x.shape
     t = b * s
-    tp = jax.lax.axis_size(tp_axis)
     capacity = max(1, math.ceil(t * m.top_k / m.num_experts
                                 * m.capacity_factor))
 
@@ -229,6 +236,6 @@ def moe_block(p, cfg, x) -> Tuple[jax.Array, jax.Array]:
         fn_wrapped, mesh=mesh,
         in_specs=(x_spec, p_specs),
         out_specs=(x_spec, P()),
-        check_vma=False,
+        **_SHMAP_NO_CHECK,
     )(x, {k: p[k] for k in p_specs})
     return y, aux

@@ -45,6 +45,16 @@ _OP_RE = re.compile(
 )
 
 
+def xla_cost_analysis(compiled) -> Dict[str, float]:
+    """``compiled.cost_analysis()`` across jax versions: newer jax returns
+    one dict, older versions a per-device list of dicts — normalize to the
+    (single-program) dict."""
+    ca = compiled.cost_analysis() or {}
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0] if ca else {}
+    return ca
+
+
 def _shape_bytes(shape_str: str) -> int:
     total = 0
     for dtype, dims in _SHAPE_RE.findall(shape_str):
@@ -124,7 +134,7 @@ def analyze_compiled(compiled, cfg, shape, mesh, n_params_defs=None) -> Dict:
     from repro.roofline.hlo_cost import analyze_hlo_text
 
     chips = int(math.prod(mesh.devices.shape))
-    ca = compiled.cost_analysis() or {}
+    ca = xla_cost_analysis(compiled)
 
     hlo = compiled.as_text()
     cost = analyze_hlo_text(hlo)

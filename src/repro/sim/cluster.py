@@ -14,6 +14,7 @@ from typing import Callable, List, Optional
 import numpy as np
 
 from repro.core.cost_model import RuntimeModel
+from repro.sim.engine import iteration_cost, preemptible_active
 from repro.sim.spot_market import SpotMarket
 
 
@@ -63,7 +64,7 @@ class VolatileCluster:
                 raise RuntimeError("cluster idle beyond max_idle; bids too low")
         y = int(mask.sum())
         dur = self.runtime.sample(self._rng, y)
-        cost = y * price * dur                 # pay the price, not the bid
+        cost = iteration_cost(y, price, dur)   # pay the price, not the bid
         self.t += dur
         self.total_cost += cost
         self.total_idle += idle
@@ -80,14 +81,14 @@ class VolatileCluster:
         q = self.preempt_q or 0.0
         idle = 0.0
         while True:
-            up = self._rng.uniform(size=provisioned) >= q
+            up = preemptible_active(self._rng.uniform(size=provisioned), q)
             if up.sum() >= 1:
                 break
             self.t += self.idle_step
             idle += self.idle_step
         y = int(up.sum())
         dur = self.runtime.sample(self._rng, y)
-        cost = y * self.on_demand_price * dur
+        cost = iteration_cost(y, self.on_demand_price, dur)
         self.t += dur
         self.total_cost += cost
         self.total_idle += idle

@@ -1,0 +1,554 @@
+"""Vectorized JAX scenario engine: batch-simulate markets × strategies ×
+seeds in one jit.
+
+The legacy ``SpotMarket``/``VolatileCluster`` stack advances one scenario at
+a time in a Python loop; every fig3/fig4-style sweep multiplies wall-clock
+linearly and runs single-seed. This module extracts the per-tick step logic
+(price draw → bid→active-mask → time/cost/idle accounting → SGD update on
+the Theorem-1 quadratic oracle) into pure functions over an explicit
+``SimState`` pytree, drives them with ``lax.scan`` over market ticks, and
+``vmap``s twice — over a stacked ``ScenarioBatch`` and over seeds — so an
+S-scenario × R-seed grid runs in a single compiled call.
+
+Time model (§III-C), identical to the legacy loop: each *tick* draws one
+price; if ≥1 worker is active an SGD iteration runs and the clock advances
+by the sampled runtime R(y), else the clock advances by ``idle_step`` (idle
+time, no iteration). A scenario stops accumulating once it has completed its
+``J`` iterations. Active workers pay the *price*, not the bid (§IV).
+
+The shared pure helpers (`spot_active_mask`, `iteration_cost`,
+`preemptible_active`) are the single source of truth for the market/cost
+semantics: the legacy ``SpotMarket.step`` and ``VolatileCluster`` delegate
+their inner steps to them, so the Python-loop path (still used by
+``ElasticTrainer``) and the batched path cannot drift apart.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Dict, NamedTuple, Optional, Sequence
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.scipy.special import ndtr, ndtri
+
+# The pad value for absent workers in stacked bid schedules lives with the
+# strategies (which build the schedules); re-exported here for engine users.
+from repro.core.strategies import NEVER_BID
+
+# Modes / price kinds (ints so they vmap as data).
+SPOT, PREEMPTIBLE = 0, 1
+PRICE_UNIFORM, PRICE_TRUNC_GAUSS, PRICE_TRACE, PRICE_EMPIRICAL = 0, 1, 2, 3
+
+#: Bid semantics tolerance (§IV): active iff bid ≥ price − BID_EPS.
+BID_EPS = 1e-12
+
+
+# --------------------------------------------------------------------------
+# Shared pure step functions (numpy- and jax-compatible; the legacy loop in
+# sim/spot_market.py and sim/cluster.py calls these with numpy inputs).
+# --------------------------------------------------------------------------
+
+
+def spot_active_mask(bids, price):
+    """§IV bid semantics: a worker is active iff its bid covers the price."""
+    return bids >= price - BID_EPS
+
+
+def preemptible_active(u, q):
+    """§V exogenous preemption: a provisioned worker with uniform draw ``u``
+    stays up iff u ≥ q."""
+    return u >= q
+
+
+def iteration_cost(y, price, dur):
+    """Cost of one iteration: y active workers pay the prevailing price (not
+    the bid) for its duration."""
+    return y * price * dur
+
+
+# --------------------------------------------------------------------------
+# Scenario specification
+# --------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class PriceSpec:
+    """Batchable price-distribution parameters (one scenario).
+
+    kind=PRICE_UNIFORM:      U[lo, hi].
+    kind=PRICE_TRUNC_GAUSS:  N(mu, sigma²) truncated to [lo, hi] (exact
+                             inverse-CDF via ndtri — no bisection).
+    kind=PRICE_TRACE:        replay ``trace`` one entry per tick (wrapping);
+                             per-seed variation comes from a tick offset.
+    kind=PRICE_EMPIRICAL:    i.i.d. draws from the empirical quantile of
+                             ``trace`` (must be sorted) — matches
+                             ``IIDPrices(EmpiricalPrice(samples))``.
+    """
+
+    kind: int
+    lo: float
+    hi: float
+    mu: float = 0.0
+    sigma: float = 1.0
+    trace: Optional[np.ndarray] = None
+
+    @classmethod
+    def uniform(cls, lo: float, hi: float) -> "PriceSpec":
+        return cls(kind=PRICE_UNIFORM, lo=lo, hi=hi)
+
+    @classmethod
+    def trunc_gaussian(cls, mu: float, sigma: float, lo: float,
+                       hi: float) -> "PriceSpec":
+        return cls(kind=PRICE_TRUNC_GAUSS, lo=lo, hi=hi, mu=mu, sigma=sigma)
+
+    @classmethod
+    def from_trace(cls, trace: np.ndarray) -> "PriceSpec":
+        trace = np.asarray(trace, np.float32)
+        return cls(kind=PRICE_TRACE, lo=float(trace.min()),
+                   hi=float(trace.max()), trace=trace)
+
+    @classmethod
+    def empirical(cls, samples: np.ndarray) -> "PriceSpec":
+        samples = np.sort(np.asarray(samples, np.float32))
+        return cls(kind=PRICE_EMPIRICAL, lo=float(samples[0]),
+                   hi=float(samples[-1]), trace=samples)
+
+    @classmethod
+    def from_dist(cls, dist) -> "PriceSpec":
+        """Map a core.cost_model.PriceDist onto a batchable spec."""
+        from repro.core.cost_model import (EmpiricalPrice, TruncGaussianPrice,
+                                           UniformPrice)
+        if isinstance(dist, UniformPrice):
+            return cls.uniform(dist.lo, dist.hi)
+        if isinstance(dist, TruncGaussianPrice):
+            return cls.trunc_gaussian(dist.mu, dist.sigma, dist.lo, dist.hi)
+        if isinstance(dist, EmpiricalPrice):
+            return cls.empirical(dist.samples)
+        raise TypeError(f"no batchable spec for {type(dist).__name__}")
+
+
+@dataclasses.dataclass
+class Scenario:
+    """One simulation scenario = market × strategy-plan × runtime model.
+
+    Exactly one of ``bid_schedule`` (mode=SPOT: per-iteration per-worker
+    bids, shape (J, n)) or ``worker_schedule`` (mode=PREEMPTIBLE: provisioned
+    worker counts, shape (J,)) must be given.
+    """
+
+    price: PriceSpec
+    alpha: float                            # SGD step size
+    bid_schedule: Optional[np.ndarray] = None
+    worker_schedule: Optional[np.ndarray] = None
+    preempt_q: float = 0.0
+    on_demand_price: float = 1.0
+    rt_kind: str = "exp"                    # "exp" | "det"
+    rt_lam: float = 1.0
+    rt_delta: float = 0.05
+    rt_const: float = 1.0
+    idle_step: float = 0.1
+    name: str = ""
+
+    def __post_init__(self):
+        if (self.bid_schedule is None) == (self.worker_schedule is None):
+            raise ValueError("give exactly one of bid_schedule / "
+                             "worker_schedule")
+        if self.bid_schedule is not None:
+            self.bid_schedule = np.atleast_2d(
+                np.asarray(self.bid_schedule, np.float32))
+
+    @property
+    def mode(self) -> int:
+        return SPOT if self.bid_schedule is not None else PREEMPTIBLE
+
+    @property
+    def J(self) -> int:
+        sched = (self.bid_schedule if self.bid_schedule is not None
+                 else self.worker_schedule)
+        return int(np.shape(sched)[0])
+
+    @property
+    def n_workers(self) -> int:
+        if self.bid_schedule is not None:
+            return int(self.bid_schedule.shape[1])
+        return int(np.max(self.worker_schedule))
+
+    @classmethod
+    def from_runtime(cls, rt, **kw) -> "Scenario":
+        """Fill the runtime fields from a core.cost_model.RuntimeModel."""
+        return cls(rt_kind=rt.kind, rt_lam=rt.lam, rt_delta=rt.delta,
+                   rt_const=rt.r_const, **kw)
+
+
+class ScenarioBatch(NamedTuple):
+    """Stacked scenarios (leading axis S) — a vmap-able pytree."""
+
+    bid_schedule: jnp.ndarray      # (S, J_max, N) f32, NEVER_BID-padded
+    worker_schedule: jnp.ndarray   # (S, J_max) i32
+    mode: jnp.ndarray              # (S,) i32
+    price_kind: jnp.ndarray        # (S,) i32
+    price_lo: jnp.ndarray          # (S,) f32
+    price_hi: jnp.ndarray
+    price_mu: jnp.ndarray
+    price_sigma: jnp.ndarray
+    trace: jnp.ndarray             # (S, L_tr) f32 (zeros when unused)
+    trace_len: jnp.ndarray         # (S,) i32
+    preempt_q: jnp.ndarray         # (S,) f32
+    on_demand_price: jnp.ndarray
+    rt_kind: jnp.ndarray           # (S,) i32: 0 exp, 1 det
+    rt_lam: jnp.ndarray
+    rt_delta: jnp.ndarray
+    rt_const: jnp.ndarray
+    alpha: jnp.ndarray
+    J: jnp.ndarray                 # (S,) i32 target iterations
+    idle_step: jnp.ndarray
+
+    @property
+    def n_scenarios(self) -> int:
+        return self.mode.shape[0]
+
+    @property
+    def j_max(self) -> int:
+        return self.bid_schedule.shape[1]
+
+    @property
+    def n_max(self) -> int:
+        return self.bid_schedule.shape[2]
+
+
+def stack_scenarios(scenarios: Sequence[Scenario]) -> ScenarioBatch:
+    """Pad and stack heterogeneous scenarios into one ScenarioBatch.
+
+    Bid schedules are padded to (J_max, N_max): extra workers get NEVER_BID,
+    iterations past a scenario's own J repeat its last row (they never run —
+    the engine stops at J — the repeat just keeps gathers in-bounds).
+    """
+    S = len(scenarios)
+    j_max = max(s.J for s in scenarios)
+    n_max = max(s.n_workers for s in scenarios)
+    l_tr = max([len(s.price.trace) for s in scenarios
+                if s.price.trace is not None] or [1])
+
+    bid = np.full((S, j_max, n_max), NEVER_BID, np.float32)
+    wrk = np.zeros((S, j_max), np.int32)
+    trc = np.zeros((S, l_tr), np.float32)
+    tln = np.ones(S, np.int32)
+    cols: Dict[str, np.ndarray] = {
+        k: np.zeros(S, np.float32) for k in
+        ["price_lo", "price_hi", "price_mu", "price_sigma", "preempt_q",
+         "on_demand_price", "rt_lam", "rt_delta", "rt_const", "alpha",
+         "idle_step"]}
+    mode = np.zeros(S, np.int32)
+    pk = np.zeros(S, np.int32)
+    rtk = np.zeros(S, np.int32)
+    J = np.zeros(S, np.int32)
+
+    for i, s in enumerate(scenarios):
+        J[i] = s.J
+        mode[i] = s.mode
+        pk[i] = s.price.kind
+        rtk[i] = 0 if s.rt_kind == "exp" else 1
+        if s.bid_schedule is not None:
+            b = s.bid_schedule
+            bid[i, :b.shape[0], :b.shape[1]] = b
+            bid[i, b.shape[0]:, :b.shape[1]] = b[-1]
+        else:
+            w = np.asarray(s.worker_schedule, np.int32)
+            wrk[i, :len(w)] = w
+            wrk[i, len(w):] = w[-1]
+        if s.price.trace is not None:
+            tr = np.asarray(s.price.trace, np.float32)
+            reps = int(np.ceil(l_tr / len(tr)))
+            trc[i] = np.tile(tr, reps)[:l_tr]
+            tln[i] = len(tr)
+        for k, v in [("price_lo", s.price.lo), ("price_hi", s.price.hi),
+                     ("price_mu", s.price.mu),
+                     ("price_sigma", s.price.sigma),
+                     ("preempt_q", s.preempt_q),
+                     ("on_demand_price", s.on_demand_price),
+                     ("rt_lam", s.rt_lam), ("rt_delta", s.rt_delta),
+                     ("rt_const", s.rt_const), ("alpha", s.alpha),
+                     ("idle_step", s.idle_step)]:
+            cols[k][i] = v
+    return ScenarioBatch(
+        bid_schedule=jnp.asarray(bid), worker_schedule=jnp.asarray(wrk),
+        mode=jnp.asarray(mode), price_kind=jnp.asarray(pk),
+        trace=jnp.asarray(trc), trace_len=jnp.asarray(tln),
+        rt_kind=jnp.asarray(rtk), J=jnp.asarray(J),
+        **{k: jnp.asarray(v) for k, v in cols.items()})
+
+
+# --------------------------------------------------------------------------
+# The Theorem-1 quadratic oracle in JAX
+# --------------------------------------------------------------------------
+
+
+class JaxQuadratic(NamedTuple):
+    """Device-side view of data.synthetic.QuadraticProblem. The quadratic is
+    exact, so error = G(w) − G* = ½ (w−w*)ᵀ H (w−w*) — no residual pass."""
+
+    A: jnp.ndarray          # (n_samples, d, d)
+    b: jnp.ndarray          # (n_samples, d)
+    H: jnp.ndarray          # (d, d) average Hessian
+    w_star: jnp.ndarray     # (d,)
+
+    @property
+    def n_samples(self) -> int:
+        return self.A.shape[0]
+
+    def error(self, w: jnp.ndarray) -> jnp.ndarray:
+        d = w - self.w_star
+        return 0.5 * d @ (self.H @ d)
+
+    def full_grad(self, w: jnp.ndarray) -> jnp.ndarray:
+        return self.H @ (w - self.w_star)
+
+    def minibatch_grads(self, key, w: jnp.ndarray, n_workers: int,
+                        batch: int) -> jnp.ndarray:
+        """Per-worker minibatch gradients, shape (n_workers, d)."""
+        idx = jax.random.randint(key, (n_workers, batch), 0, self.n_samples)
+        a = self.A[idx]                                  # (n, b, d, d)
+        r = jnp.einsum("wbij,j->wbi", a, w) - self.b[idx]
+        return jnp.einsum("wbij,wbi->wj", a, r) / batch
+
+
+def jax_quadratic(quad) -> JaxQuadratic:
+    """Lift a numpy QuadraticProblem onto the device."""
+    return JaxQuadratic(A=jnp.asarray(quad.A, jnp.float32),
+                        b=jnp.asarray(quad.b, jnp.float32),
+                        H=jnp.asarray(quad.H, jnp.float32),
+                        w_star=jnp.asarray(quad.w_star, jnp.float32))
+
+
+# --------------------------------------------------------------------------
+# The engine
+# --------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class SimConfig:
+    """Static (compile-time) engine configuration."""
+
+    n_ticks: int                 # market ticks to scan (≥ J + idle budget)
+    batch: int = 16              # per-worker minibatch size
+    grad: str = "minibatch"      # "minibatch" | "full" (deterministic)
+
+
+class SimState(NamedTuple):
+    """Per-(scenario, seed) scan carry."""
+
+    t: jnp.ndarray               # wall clock
+    j: jnp.ndarray               # iterations completed (i32)
+    total_cost: jnp.ndarray
+    total_idle: jnp.ndarray
+    w: jnp.ndarray               # (d,) SGD iterate
+    err_traj: jnp.ndarray        # (J_max,) error after iteration j
+    cost_traj: jnp.ndarray       # (J_max,) cumulative cost
+    time_traj: jnp.ndarray       # (J_max,) wall clock
+    y_traj: jnp.ndarray          # (J_max,) active workers
+
+
+@dataclasses.dataclass
+class EngineResult:
+    """Stacked trajectories, shape (S, R, J_max); invalid entries are NaN
+    (iterations a scenario never ran within the tick budget)."""
+
+    errors: np.ndarray
+    costs: np.ndarray
+    times: np.ndarray
+    ys: np.ndarray
+    iterations: np.ndarray       # (S, R) completed iterations
+    total_time: np.ndarray       # (S, R) final wall clock (incl. idle)
+    total_cost: np.ndarray       # (S, R)
+    total_idle: np.ndarray       # (S, R)
+    J: np.ndarray                # (S,) per-scenario targets
+
+    @property
+    def completed(self) -> np.ndarray:
+        """(S, R) bool: scenario finished all J iterations within n_ticks."""
+        return self.iterations >= self.J[:, None]
+
+    def summary(self) -> Dict[str, np.ndarray]:
+        ys = np.where(np.isnan(self.ys), np.nan, np.maximum(self.ys, 1.0))
+        with np.errstate(invalid="ignore"):
+            return {
+                "iterations": self.iterations,
+                "time": self.total_time,
+                "cost": self.total_cost,
+                "idle": self.total_idle,
+                "mean_active": np.nanmean(self.ys, axis=-1),
+                "mean_inv_y": np.nanmean(1.0 / ys, axis=-1),
+            }
+
+
+def _draw_price(sc: ScenarioBatch, key, k, seed) -> jnp.ndarray:
+    """One price per tick; all three kinds computed, the scenario's picked."""
+    u = jax.random.uniform(key)
+    p_unif = sc.price_lo + u * (sc.price_hi - sc.price_lo)
+    lo_z = ndtr((sc.price_lo - sc.price_mu) / sc.price_sigma)
+    hi_z = ndtr((sc.price_hi - sc.price_mu) / sc.price_sigma)
+    p_gauss = jnp.clip(
+        sc.price_mu + sc.price_sigma * ndtri(lo_z + u * (hi_z - lo_z)),
+        sc.price_lo, sc.price_hi)
+    # per-seed trace variation = deterministic tick offset (≈ np.roll)
+    p_trace = sc.trace[(k + seed * 1013) % sc.trace_len]
+    # empirical quantile: samples[int(u·len)] on the sorted trace
+    p_emp = sc.trace[jnp.minimum((u * sc.trace_len).astype(jnp.int32),
+                                 sc.trace_len - 1)]
+    return jnp.where(
+        sc.price_kind == PRICE_EMPIRICAL, p_emp,
+        jnp.where(sc.price_kind == PRICE_TRACE, p_trace,
+                  jnp.where(sc.price_kind == PRICE_TRUNC_GAUSS, p_gauss,
+                            p_unif)))
+
+
+def _sim_one(sc: ScenarioBatch, quad: JaxQuadratic, w0, seed,
+             cfg: SimConfig):
+    """Simulate one scenario × one seed (vmapped twice by `simulate`).
+    ``sc`` holds per-scenario scalars/rows (leading S axis stripped)."""
+    j_max = sc.bid_schedule.shape[0]
+    n_max = sc.bid_schedule.shape[1]
+    base = jax.random.fold_in(jax.random.PRNGKey(20), seed)
+
+    def tick(state: SimState, k):
+        kk = jax.random.fold_in(base, k)
+        k_price, k_dur, k_grad, k_up = jax.random.split(kk, 4)
+        price = _draw_price(sc, k_price, k, seed)
+
+        row = jnp.minimum(state.j, j_max - 1)
+        bids = sc.bid_schedule[row]                        # (N,)
+        mask_spot = spot_active_mask(bids, price)
+        prov = sc.worker_schedule[row]
+        mask_pre = (jnp.arange(n_max) < prov) & preemptible_active(
+            jax.random.uniform(k_up, (n_max,)), sc.preempt_q)
+        mask = jnp.where(sc.mode == PREEMPTIBLE, mask_pre, mask_spot)
+        y = jnp.sum(mask.astype(jnp.float32))
+
+        done = state.j >= sc.J
+        running = (y >= 1.0) & ~done
+        idling = ~running & ~done
+
+        # runtime R(y): max of the active workers' exp(λ) draws + Δ, or R
+        draws = jax.random.exponential(k_dur, (n_max,)) / sc.rt_lam
+        dur_exp = jnp.max(jnp.where(mask, draws, 0.0)) + sc.rt_delta
+        dur = jnp.where(sc.rt_kind == 1, sc.rt_const, dur_exp)
+        price_paid = jnp.where(sc.mode == PREEMPTIBLE, sc.on_demand_price,
+                               price)
+        cost_inc = jnp.where(running, iteration_cost(y, price_paid, dur),
+                             0.0)
+        dt = jnp.where(running, dur, jnp.where(idling, sc.idle_step, 0.0))
+
+        # SGD update: mean gradient over the active workers
+        if cfg.grad == "full":
+            g = quad.full_grad(state.w)
+        else:
+            gw = quad.minibatch_grads(k_grad, state.w, n_max, cfg.batch)
+            g = jnp.sum(gw * mask[:, None], 0) / jnp.maximum(y, 1.0)
+        w_new = jnp.where(running, state.w - sc.alpha * g, state.w)
+
+        t_new = state.t + dt
+        cost_new = state.total_cost + cost_inc
+        idle_new = state.total_idle + jnp.where(idling, sc.idle_step, 0.0)
+        err = quad.error(w_new)
+
+        idx = jnp.minimum(state.j, j_max - 1)
+
+        def put(traj, val):
+            return traj.at[idx].set(jnp.where(running, val, traj[idx]))
+
+        new = SimState(
+            t=t_new, j=state.j + running.astype(jnp.int32),
+            total_cost=cost_new, total_idle=idle_new, w=w_new,
+            err_traj=put(state.err_traj, err),
+            cost_traj=put(state.cost_traj, cost_new),
+            time_traj=put(state.time_traj, t_new),
+            y_traj=put(state.y_traj, y))
+        return new, None
+
+    nan_traj = jnp.full(j_max, jnp.nan, jnp.float32)
+    init = SimState(t=jnp.float32(0.0), j=jnp.int32(0),
+                    total_cost=jnp.float32(0.0), total_idle=jnp.float32(0.0),
+                    w=jnp.asarray(w0, jnp.float32),
+                    err_traj=nan_traj, cost_traj=nan_traj,
+                    time_traj=nan_traj, y_traj=nan_traj)
+    final, _ = lax.scan(tick, init, jnp.arange(cfg.n_ticks))
+    return final
+
+
+@functools.partial(jax.jit, static_argnames=("cfg",))
+def _simulate_jit(batch: ScenarioBatch, quad: JaxQuadratic, w0, seeds,
+                  cfg: SimConfig):
+    over_seeds = jax.vmap(_sim_one, in_axes=(None, None, None, 0, None))
+    over_scenarios = jax.vmap(over_seeds, in_axes=(0, None, None, None,
+                                                   None))
+    return over_scenarios(batch, quad, w0, seeds, cfg)
+
+
+def simulate(scenarios, quad, w0, seeds, cfg: SimConfig) -> EngineResult:
+    """Run S scenarios × R seeds in one compiled call.
+
+    scenarios: ScenarioBatch or list[Scenario]; quad: QuadraticProblem or
+    JaxQuadratic; seeds: int count or explicit sequence.
+    Returns stacked (S, R, J_max) trajectories.
+    """
+    if not isinstance(scenarios, ScenarioBatch):
+        scenarios = stack_scenarios(scenarios)
+    if not isinstance(quad, JaxQuadratic):
+        quad = jax_quadratic(quad)
+    if np.isscalar(seeds):
+        seeds = np.arange(int(seeds))
+    seeds = jnp.asarray(np.asarray(seeds, np.int32))
+    final = _simulate_jit(scenarios, quad, jnp.asarray(w0, jnp.float32),
+                          seeds, cfg)
+    return EngineResult(
+        errors=np.asarray(final.err_traj),
+        costs=np.asarray(final.cost_traj),
+        times=np.asarray(final.time_traj),
+        ys=np.asarray(final.y_traj),
+        iterations=np.asarray(final.j),
+        total_time=np.asarray(final.t),
+        total_cost=np.asarray(final.total_cost),
+        total_idle=np.asarray(final.total_idle),
+        J=np.asarray(scenarios.J))
+
+
+# --------------------------------------------------------------------------
+# Strategy → Scenario builders
+# --------------------------------------------------------------------------
+
+
+def scenario_from_strategy(strategy, *, alpha: float, rt,
+                           dist=None, q: Optional[float] = None,
+                           on_demand_price: float = 1.0,
+                           n_max: Optional[int] = None,
+                           idle_step: Optional[float] = None,
+                           J: Optional[int] = None,
+                           price_spec: Optional[PriceSpec] = None,
+                           name: str = "") -> Scenario:
+    """Compile a core.strategies.Strategy into a batchable Scenario.
+
+    Spot strategies (``bids``) become a stacked bid schedule against the
+    price distribution ``dist`` (or an explicit ``price_spec``, e.g. a
+    tick-replayed trace); provisioning strategies (``workers``) become a
+    worker schedule under exogenous preemption probability ``q``.
+    """
+    J = J or strategy.total_iterations
+    name = name or getattr(strategy, "name", "")
+    if q is None:
+        sched = strategy.bid_schedule(J, n_max=n_max)
+        if idle_step is None:
+            idle_step = rt.expected(max(sched.shape[1], 1))
+        return Scenario.from_runtime(
+            rt, price=price_spec or PriceSpec.from_dist(dist), alpha=alpha,
+            bid_schedule=sched, idle_step=idle_step, name=name)
+    wsched = strategy.worker_schedule(J)
+    return Scenario.from_runtime(
+        rt, price=PriceSpec.uniform(0.0, 1.0), alpha=alpha,
+        worker_schedule=wsched, preempt_q=q,
+        on_demand_price=on_demand_price,
+        idle_step=idle_step if idle_step is not None else rt.expected(1),
+        name=name)

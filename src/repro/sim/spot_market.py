@@ -14,6 +14,7 @@ from typing import Optional
 import numpy as np
 
 from repro.core.cost_model import EmpiricalPrice, PriceDist
+from repro.sim.engine import spot_active_mask
 
 
 class PriceProcess:
@@ -77,13 +78,33 @@ class TracePrices(PriceProcess):
 
 
 @dataclasses.dataclass
+class TickPrices(PriceProcess):
+    """Call-counting replay: the k-th price *query* returns trace[k % len],
+    regardless of the query time. This is the consumption order of the
+    batched engine (one draw per tick), so feeding the same trace to a
+    TickPrices market and to a PRICE_TRACE scenario yields tick-exact parity
+    between the legacy loop and `repro.sim.engine.simulate`."""
+
+    trace: np.ndarray
+
+    def __post_init__(self):
+        self._k = 0
+
+    def price(self, t: float) -> float:
+        p = float(self.trace[self._k % len(self.trace)])
+        self._k += 1
+        return p
+
+
+@dataclasses.dataclass
 class SpotMarket:
     """Bid semantics (§IV): a worker is active iff its bid ≥ the prevailing
-    price; active workers pay the *price* (not the bid) per unit time."""
+    price; active workers pay the *price* (not the bid) per unit time.
+    The mask logic is shared with the batched engine (`spot_active_mask`)."""
 
     process: PriceProcess
 
     def step(self, t: float, bids: np.ndarray):
         price = self.process.price(t)
-        active = (np.asarray(bids, float) >= price - 1e-12)
+        active = spot_active_mask(np.asarray(bids, float), price)
         return price, active.astype(np.float32)

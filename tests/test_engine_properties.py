@@ -1,0 +1,108 @@
+"""Invariants of the batched scenario engine (plain statistical property
+tests — no hypothesis dependency)."""
+import numpy as np
+import pytest
+
+from repro.core import preemption as pe
+from repro.core.cost_model import UniformPrice
+from repro.data.synthetic import QuadraticProblem
+from repro.sim import engine
+
+
+@pytest.fixture(scope="module")
+def problem():
+    quad = QuadraticProblem(dim=6, n_samples=64, cond=5.0, noise=0.2, seed=0)
+    w0 = quad.w_star + 1.0
+    return quad, w0, 0.4 / quad.L
+
+
+def _spot(alpha, bids, J=120, **kw):
+    kw.setdefault("rt_kind", "exp")
+    kw.setdefault("rt_lam", 2.0)
+    kw.setdefault("idle_step", 0.5)
+    return engine.Scenario(price=kw.pop("price",
+                                        engine.PriceSpec.uniform(0.2, 1.0)),
+                           alpha=alpha,
+                           bid_schedule=np.tile(bids, (J, 1)), **kw)
+
+
+def test_cost_monotone_in_time(problem):
+    """Cumulative cost and wall clock are nondecreasing along every
+    trajectory, and cost only grows while time does."""
+    quad, w0, alpha = problem
+    scs = [_spot(alpha, [0.6, 0.6, 0.6]),
+           _spot(alpha, [0.9, 0.5, 0.5, 0.5])]
+    res = engine.simulate(scs, quad, w0, 3,
+                          engine.SimConfig(n_ticks=600, batch=4))
+    assert res.completed.all()
+    for i in range(2):
+        for r in range(3):
+            J = int(res.J[i])
+            assert np.all(np.diff(res.costs[i, r, :J]) >= -1e-5)
+            assert np.all(np.diff(res.times[i, r, :J]) > 0)
+
+
+def test_idle_zero_when_lowest_bid_covers_support(problem):
+    """Bidding ≥ the price-support max on every worker never idles: zero
+    idle time, all iterations complete, full fleet always active."""
+    quad, w0, alpha = problem
+    dist = UniformPrice(0.2, 1.0)
+    sc = _spot(alpha, [dist.hi, dist.hi, dist.hi],
+               price=engine.PriceSpec.uniform(dist.lo, dist.hi))
+    res = engine.simulate([sc], quad, w0, 4,
+                          engine.SimConfig(n_ticks=130, batch=4))
+    assert res.completed.all()
+    assert np.all(res.total_idle == 0.0)
+    assert np.all(res.ys[0, :, :int(res.J[0])] == 3)
+
+
+def test_conditional_inv_y_matches_two_group_model(problem):
+    """Conditional-on-running E[1/y] under a two-bid plan matches the §IV-B
+    model: y = n w.p. γ = F(b2)/F(b1), else n1 (Lemma 3 machinery)."""
+    quad, w0, alpha = problem
+    dist = UniformPrice(0.2, 1.0)
+    n1, n = 2, 8
+    b1, b2 = 0.9, 0.5
+    bids = np.concatenate([np.full(n1, b1), np.full(n - n1, b2)])
+    sc = _spot(alpha, bids, J=400,
+               price=engine.PriceSpec.uniform(dist.lo, dist.hi))
+    res = engine.simulate([sc], quad, w0, 6,
+                          engine.SimConfig(n_ticks=900, batch=2))
+    assert res.completed.all()
+    gamma = float(dist.cdf(b2) / dist.cdf(b1))
+    expect = pe.inv_y_two_groups(n1, n, gamma)
+    got = float(np.nanmean(1.0 / np.maximum(res.ys[0], 1.0)))
+    assert got == pytest.approx(expect, abs=0.02)
+
+
+def test_preemptible_active_counts_and_accounting(problem):
+    """§V mode: conditional mean active ≈ n(1−q)/(1−qⁿ), and total cost
+    equals on_demand_price · Σ y_j · R (deterministic runtime)."""
+    quad, w0, alpha = problem
+    n, q, price = 8, 0.5, 0.7
+    sc = engine.Scenario(price=engine.PriceSpec.uniform(0.0, 1.0),
+                         alpha=alpha, worker_schedule=np.full(300, n),
+                         preempt_q=q, on_demand_price=price, rt_kind="det",
+                         rt_const=1.0, idle_step=0.1)
+    res = engine.simulate([sc], quad, w0, 3,
+                          engine.SimConfig(n_ticks=400, batch=2))
+    assert res.completed.all()
+    ys = res.ys[0, :, :300]
+    mean_y = n * (1 - q) / (1 - q ** n)
+    assert np.mean(ys) == pytest.approx(mean_y, rel=0.1)
+    np.testing.assert_allclose(res.total_cost[0], price * ys.sum(axis=-1),
+                               rtol=1e-4)
+
+
+def test_truncation_is_flagged_not_silent(problem):
+    """A bid below the price support floor can never run: the engine reports
+    0 iterations, NaN trajectories, and completed=False."""
+    quad, w0, alpha = problem
+    sc = _spot(alpha, [0.1, 0.1], J=10,
+               price=engine.PriceSpec.uniform(0.2, 1.0))
+    res = engine.simulate([sc], quad, w0, 2,
+                          engine.SimConfig(n_ticks=50, batch=2))
+    assert not res.completed.any()
+    assert np.all(res.iterations == 0)
+    assert np.all(np.isnan(res.errors))
+    assert res.total_idle[0, 0] == pytest.approx(50 * 0.5)

@@ -15,6 +15,7 @@ os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
 import json
 import jax, jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
+from repro.roofline.analysis import xla_cost_analysis
 from repro.roofline.hlo_cost import analyze_hlo_text
 
 mesh = jax.make_mesh((2, 4), ("data", "model"))
@@ -33,7 +34,7 @@ w = jax.ShapeDtypeStruct((L, D, D), jnp.float32,
 comp = jax.jit(jax.grad(lambda x, w: f(x, w), argnums=1)).lower(x, w
                                                                 ).compile()
 c = analyze_hlo_text(comp.as_text())
-xla = comp.cost_analysis().get("flops", 0.0)
+xla = xla_cost_analysis(comp).get("flops", 0.0)
 print("RESULT " + json.dumps({
     "flops": c.flops, "xla": xla, "coll": dict(c.collective),
     "bytes": c.bytes,
