@@ -1,0 +1,82 @@
+"""Scan-native trainer grid: train a real (reduced) transformer under an
+8-strategy × 8-seed spot-market grid in ONE compiled call.
+
+Every (strategy, seed) cell runs the full elastic training loop — price
+draw, bid→active-mask, masked-renormalized SGD on the model, time/cost/idle
+accounting — inside the batched engine's ``lax.scan``; the grid is vmapped
+over scenarios × seeds, so 64 end-to-end training runs cost one jit
+dispatch. The same grid on the legacy per-strategy `ElasticTrainer` loop
+is ~100× slower (`python -m benchmarks.run --only trainer`).
+
+Prints the accuracy-vs-cost frontier the paper trades: mean final loss vs
+mean $-cost per strategy, plus the per-cell spread over seeds.
+
+Run: PYTHONPATH=src python examples/train_grid.py [--seeds 8] [--steps 40]
+"""
+import argparse
+import time
+
+import numpy as np
+
+from repro.configs import ARCHS
+from repro.configs.base import InputShape, JobConfig
+from repro.core import bidding, strategies as strat
+from repro.core.cost_model import RuntimeModel, UniformPrice
+from repro.sim import engine
+from repro.train.trainer import train_batched
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--seeds", type=int, default=8)
+    ap.add_argument("--steps", type=int, default=40)
+    args = ap.parse_args()
+
+    n_w, J = 4, args.steps
+    cfg = ARCHS["qwen2-7b"].reduced().with_(
+        num_layers=1, d_model=32, num_heads=2, num_kv_heads=1, d_ff=64,
+        vocab_size=128, head_dim=16)
+    job = JobConfig(model=cfg, shape=InputShape("grid", 16, 8, "train"),
+                    n_workers=n_w, learning_rate=0.1)
+    dist = UniformPrice(0.2, 1.0)
+    rt = RuntimeModel(kind="exp", lam=2.0, delta=0.05)
+
+    def two_bid(b1, b2, name):
+        return strat.FixedBids(bidding.BidPlan(
+            n=n_w, n1=n_w // 2, b1=b1, b2=b2, J=J, expected_cost=0,
+            expected_time=0, expected_error=0), name=name)
+
+    strategies = [two_bid(1.0, round(b2, 2), f"b2={b2:.2f}")
+                  for b2 in np.linspace(0.3, 1.0, 8)]
+    scenarios = [engine.scenario_from_strategy(
+        s, alpha=job.learning_rate, rt=rt, dist=dist, n_max=n_w,
+        name=s.name) for s in strategies]
+
+    print(f"training {len(scenarios)} strategies x {args.seeds} seeds "
+          f"({len(scenarios) * args.seeds} end-to-end runs of a "
+          f"{cfg.name}-reduced transformer, J={J}) in one jit...")
+    t0 = time.time()
+    res = train_batched(job, scenarios, seeds=args.seeds,
+                        n_ticks=2 * J + 16)
+    wall = time.time() - t0
+    runs = res.losses.shape[0] * res.losses.shape[1]
+    print(f"wall={wall:.1f}s ({runs / wall:.1f} training runs/sec, "
+          f"completed={res.completed.mean():.0%})\n")
+
+    print(f"{'strategy':>10} {'final_loss':>16} {'cost':>14} "
+          f"{'idle':>8} {'mean_y':>7}")
+    s = res.summary()
+    for i, sc in enumerate(scenarios):
+        fl = res.losses[i, :, -1]
+        print(f"{sc.name:>10} {np.nanmean(fl):>9.3f} ±{np.nanstd(fl):.3f} "
+              f"{res.total_cost[i].mean():>9.1f} "
+              f"±{res.total_cost[i].std():.1f} "
+              f"{res.total_idle[i].mean():>8.1f} "
+              f"{np.nanmean(s['mean_active'][i]):>7.2f}")
+    print("\nlow b2 → cheaper but slower/noisier (fewer active workers); "
+          "the frontier is the paper's accuracy-vs-cost trade-off on a "
+          "real model.")
+
+
+if __name__ == "__main__":
+    main()

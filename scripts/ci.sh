@@ -1,9 +1,21 @@
 #!/usr/bin/env bash
 # Tier-1 CI: fast test suite + a 5-scenario engine smoke sweep.
-# Run from anywhere: scripts/ci.sh
+# Run from anywhere: scripts/ci.sh [--smoke-bench]
+#
+# --smoke-bench additionally runs every benchmark in --smoke mode (2-tick /
+# 2-seed budgets) so perf-path regressions — import errors, shape breaks,
+# jit failures in benchmarks/run.py — fail CI instead of rotting silently.
 set -euo pipefail
 cd "$(dirname "$0")/.."
 export PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH}
+
+SMOKE_BENCH=0
+for arg in "$@"; do
+  case "$arg" in
+    --smoke-bench) SMOKE_BENCH=1 ;;
+    *) echo "unknown option: $arg" >&2; exit 2 ;;
+  esac
+done
 
 echo "== tier-1 tests (excluding slow) =="
 python -m pytest -x -q -m "not slow"
@@ -29,4 +41,9 @@ print("smoke sweep OK:",
       [f"{s.name}:cost={c:.1f}" for s, c in
        zip(scenarios, res.total_cost.mean(axis=1))])
 PY
+
+if [ "$SMOKE_BENCH" = 1 ]; then
+  echo "== benchmark smoke (--smoke: 2-tick budgets) =="
+  python -m benchmarks.run --smoke
+fi
 echo "CI OK"

@@ -33,10 +33,17 @@ def example_weights(active_mask: jax.Array, batch_size: int) -> jax.Array:
 
 
 def weighted_mean(values: jax.Array, weights: jax.Array) -> jax.Array:
-    """Σ w·v / Σ w with a guard for the all-preempted case (y_j = 0 steps are
-    idle time — the trainer skips them, but the guard keeps jit total)."""
-    denom = jnp.maximum(weights.sum(), 1e-9)
-    return (values * weights).sum() / denom
+    """Σ w·v / Σ w, exactly 0 (value *and* gradient) when Σ w = 0.
+
+    y_j = 0 steps are idle time: inside the batched engine's scan every tick
+    still evaluates the step, so an ε-denominator alone would silently scale
+    the surviving Σ w·v (nonzero when weights are fractional) instead of
+    erasing it. The ``where`` keeps jit total — no NaN from 0/0 — while
+    making the all-preempted step a true no-op; the engine additionally
+    gates the whole model update on the iteration running."""
+    w_sum = weights.sum()
+    mean = (values * weights).sum() / jnp.maximum(w_sum, 1e-9)
+    return jnp.where(w_sum > 0, mean, 0.0)
 
 
 def active_fraction(active_mask: jax.Array) -> jax.Array:

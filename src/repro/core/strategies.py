@@ -34,6 +34,22 @@ def _pad_bids(bids: np.ndarray, n_max: Optional[int]) -> np.ndarray:
     return bids
 
 
+@dataclasses.dataclass(frozen=True)
+class PlanTable:
+    """A strategy fully resolved to data the batched engine can scan over.
+
+    ``bids[b, j]`` are the per-worker bids for iteration ``j`` under
+    elapsed-time bucket ``b``; ``starts`` (ascending, ``starts[0] == 0``)
+    are the bucket start times; ``replan_at`` is the iteration at which the
+    engine latches the bucket for the current wall clock (``J + 1`` — never
+    — for time-invariant strategies, whose table has a single bucket).
+    """
+
+    bids: np.ndarray             # (B, J, n) float
+    starts: np.ndarray           # (B,) float
+    replan_at: int
+
+
 class Strategy:
     name: str = "base"
 
@@ -65,6 +81,16 @@ class Strategy:
         """Provisioned worker counts per iteration, shape (J,)."""
         J = J or self.total_iterations
         return np.array([self.workers(j) for j in range(J)], np.int64)
+
+    def plan_table(self, J: Optional[int] = None,
+                   n_max: Optional[int] = None) -> PlanTable:
+        """The strategy resolved to a precomputed engine plan table. Base
+        strategies are time-invariant: one bucket, never replanned.
+        Time-adaptive strategies (``DynamicBids``) override this with one
+        schedule per coarse elapsed-time bucket."""
+        J = J or self.total_iterations
+        return PlanTable(bids=self.bid_schedule(J, n_max=n_max)[None],
+                         starts=np.zeros(1), replan_at=J + 1)
 
 
 @dataclasses.dataclass
@@ -166,6 +192,30 @@ class DynamicBids(Strategy):
         rows2 = np.tile(_pad_bids(plan2.bids, n_max),
                         (max(J - self.switch_at, 0), 1))
         return np.concatenate([rows1, rows2])[:J]
+
+    def plan_table(self, J=None, n_max=None, n_buckets: int = 8):
+        """One stage-2 replan per coarse elapsed-time bucket over [0, θ]:
+        bucket b assumes the switch happens at elapsed time ``starts[b]``
+        and re-optimizes the bids on the leftover (ε, θ − starts[b])
+        budget. The engine latches the bucket from the *actual* clock at
+        iteration ``switch_at`` — recovering the legacy adaptive semantics
+        (which replans on the true elapsed time) up to the bucket width,
+        with no Python callback inside the scan."""
+        J = J or self.total_iterations
+        starts = np.linspace(0.0, self.theta, n_buckets)
+        plans2 = [self._replan(self.theta - t, J - self.switch_at)
+                  for t in starts]
+        n_max = max([n_max or 0, self._plan1.n] + [p.n for p in plans2])
+        rows1 = np.tile(_pad_bids(self._plan1.bids, n_max),
+                        (min(self.switch_at, J), 1))
+        table = np.stack([
+            np.concatenate([
+                rows1,
+                np.tile(_pad_bids(p.bids, n_max),
+                        (max(J - self.switch_at, 0), 1))])[:J]
+            for p in plans2])
+        return PlanTable(bids=table, starts=starts,
+                         replan_at=min(self.switch_at, J))
 
 
 @dataclasses.dataclass

@@ -14,7 +14,7 @@ from typing import Callable, List, Optional
 import numpy as np
 
 from repro.core.cost_model import RuntimeModel
-from repro.sim.engine import iteration_cost, preemptible_active
+from repro.sim.market_core import iteration_cost, preemptible_active
 from repro.sim.spot_market import SpotMarket
 
 

@@ -4,29 +4,46 @@ seeds in one jit.
 The legacy ``SpotMarket``/``VolatileCluster`` stack advances one scenario at
 a time in a Python loop; every fig3/fig4-style sweep multiplies wall-clock
 linearly and runs single-seed. This module extracts the per-tick step logic
-(price draw → bid→active-mask → time/cost/idle accounting → SGD update on
-the Theorem-1 quadratic oracle) into pure functions over an explicit
-``SimState`` pytree, drives them with ``lax.scan`` over market ticks, and
-``vmap``s twice — over a stacked ``ScenarioBatch`` and over seeds — so an
-S-scenario × R-seed grid runs in a single compiled call.
+(price draw → bid→active-mask → time/cost/idle accounting → masked model
+update) into pure functions over an explicit ``SimState`` pytree, drives
+them with ``lax.scan`` over market ticks, and ``vmap``s twice — over a
+stacked ``ScenarioBatch`` and over seeds — so an S-scenario × R-seed grid
+runs in a single compiled call.
+
+The *model under simulation* is pluggable (``ModelProgram``): the default is
+the Theorem-1 quadratic oracle, but any pure step over an arbitrary
+``(params, opt_state)``-style pytree plugs into the same scan —
+``repro.train.trainer.train_batched`` runs real reduced models (the elastic
+masked train step) this way, so a strategy × market grid trains end-to-end
+inside one compiled call with no host sync between ticks.
 
 Time model (§III-C), identical to the legacy loop: each *tick* draws one
 price; if ≥1 worker is active an SGD iteration runs and the clock advances
 by the sampled runtime R(y), else the clock advances by ``idle_step`` (idle
 time, no iteration). A scenario stops accumulating once it has completed its
 ``J`` iterations. Active workers pay the *price*, not the bid (§IV).
+Iterations with zero active workers are a *true no-op*: the whole model
+pytree is gated on ``running`` with ``jnp.where``, so idle/finished ticks
+cannot leak scaled gradients into the iterate.
+
+Adaptive (time-dependent) strategies enter the scan as precomputed *plan
+tables*: ``bid_table[b, j]`` holds the bids for iteration ``j`` under
+elapsed-time bucket ``b`` (``bucket_starts``); at the first tick of
+iteration ``replan_at`` the engine latches the bucket for the current clock
+— recovering the legacy ``DynamicBids`` replan-on-actual-time semantics up
+to the bucket resolution, with zero Python callbacks mid-scan.
 
 The shared pure helpers (`spot_active_mask`, `iteration_cost`,
 `preemptible_active`) are the single source of truth for the market/cost
 semantics: the legacy ``SpotMarket.step`` and ``VolatileCluster`` delegate
 their inner steps to them, so the Python-loop path (still used by
-``ElasticTrainer``) and the batched path cannot drift apart.
+``ElasticTrainer.run``) and the batched path cannot drift apart.
 """
 from __future__ import annotations
 
 import dataclasses
 import functools
-from typing import Dict, NamedTuple, Optional, Sequence
+from typing import Any, Callable, Dict, NamedTuple, Optional, Sequence
 
 import numpy as np
 
@@ -38,36 +55,15 @@ from jax.scipy.special import ndtr, ndtri
 # The pad value for absent workers in stacked bid schedules lives with the
 # strategies (which build the schedules); re-exported here for engine users.
 from repro.core.strategies import NEVER_BID
+# The shared §IV/§V market/cost semantics live in the dependency-free
+# sim.market_core (so the legacy numpy loop uses them without importing
+# JAX); re-exported here for engine users.
+from repro.sim.market_core import (BID_EPS, iteration_cost,  # noqa: F401
+                                   preemptible_active, spot_active_mask)
 
 # Modes / price kinds (ints so they vmap as data).
 SPOT, PREEMPTIBLE = 0, 1
 PRICE_UNIFORM, PRICE_TRUNC_GAUSS, PRICE_TRACE, PRICE_EMPIRICAL = 0, 1, 2, 3
-
-#: Bid semantics tolerance (§IV): active iff bid ≥ price − BID_EPS.
-BID_EPS = 1e-12
-
-
-# --------------------------------------------------------------------------
-# Shared pure step functions (numpy- and jax-compatible; the legacy loop in
-# sim/spot_market.py and sim/cluster.py calls these with numpy inputs).
-# --------------------------------------------------------------------------
-
-
-def spot_active_mask(bids, price):
-    """§IV bid semantics: a worker is active iff its bid covers the price."""
-    return bids >= price - BID_EPS
-
-
-def preemptible_active(u, q):
-    """§V exogenous preemption: a provisioned worker with uniform draw ``u``
-    stays up iff u ≥ q."""
-    return u >= q
-
-
-def iteration_cost(y, price, dur):
-    """Cost of one iteration: y active workers pay the prevailing price (not
-    the bid) for its duration."""
-    return y * price * dur
 
 
 # --------------------------------------------------------------------------
@@ -136,14 +132,28 @@ class Scenario:
     """One simulation scenario = market × strategy-plan × runtime model.
 
     Exactly one of ``bid_schedule`` (mode=SPOT: per-iteration per-worker
-    bids, shape (J, n)) or ``worker_schedule`` (mode=PREEMPTIBLE: provisioned
-    worker counts, shape (J,)) must be given.
+    bids, shape (J, n)), ``bid_table`` (mode=SPOT, adaptive: per-time-bucket
+    bid schedules, shape (B, J, n) — see ``bucket_starts``/``replan_at``) or
+    ``worker_schedule`` (mode=PREEMPTIBLE: provisioned worker counts, shape
+    (J,)) must be given.
+
+    ``bucket_starts`` (B,) are ascending bucket start times with
+    ``bucket_starts[0] == 0``; at the first tick of iteration ``replan_at``
+    the engine latches the bucket containing the current wall clock and uses
+    that table slice for the rest of the run (the precomputed analogue of
+    the legacy ``DynamicBids`` replan-on-actual-elapsed-time).
     """
 
     price: PriceSpec
     alpha: float                            # SGD step size
     bid_schedule: Optional[np.ndarray] = None
     worker_schedule: Optional[np.ndarray] = None
+    bid_table: Optional[np.ndarray] = None
+    bucket_starts: Optional[np.ndarray] = None
+    replan_at: Optional[int] = None
+    n_fleet: Optional[int] = None  # preemptible: mask width override (the
+    #                                job's worker count when the schedule
+    #                                provisions fewer than n_workers)
     preempt_q: float = 0.0
     on_demand_price: float = 1.0
     rt_kind: str = "exp"                    # "exp" | "det"
@@ -154,28 +164,59 @@ class Scenario:
     name: str = ""
 
     def __post_init__(self):
-        if (self.bid_schedule is None) == (self.worker_schedule is None):
-            raise ValueError("give exactly one of bid_schedule / "
-                             "worker_schedule")
+        given = sum(x is not None for x in
+                    (self.bid_schedule, self.bid_table,
+                     self.worker_schedule))
+        if given != 1:
+            raise ValueError("give exactly one of bid_schedule / bid_table "
+                             "/ worker_schedule")
         if self.bid_schedule is not None:
             self.bid_schedule = np.atleast_2d(
                 np.asarray(self.bid_schedule, np.float32))
+            # a plain schedule is a 1-bucket table
+            self.bid_table = self.bid_schedule[None]
+        if self.bid_table is not None:
+            self.bid_table = np.asarray(self.bid_table, np.float32)
+            if self.bid_table.ndim != 3:
+                raise ValueError(f"bid_table must be (B, J, n), got shape "
+                                 f"{self.bid_table.shape}")
+            if self.bucket_starts is None:
+                self.bucket_starts = np.zeros(self.bid_table.shape[0],
+                                              np.float32)
+            self.bucket_starts = np.asarray(self.bucket_starts, np.float32)
+            if len(self.bucket_starts) != self.bid_table.shape[0]:
+                raise ValueError(
+                    f"{len(self.bucket_starts)} bucket_starts for "
+                    f"{self.bid_table.shape[0]} table buckets")
+            if (self.bucket_starts[0] != 0.0
+                    or np.any(np.diff(self.bucket_starts) < 0)):
+                raise ValueError("bucket_starts must ascend from 0, got "
+                                 f"{self.bucket_starts}")
+            if self.bid_table.shape[0] > 1 and self.replan_at is None:
+                raise ValueError(
+                    "a multi-bucket bid_table needs replan_at (the "
+                    "iteration at which the engine latches the bucket) — "
+                    "without it only bucket 0 would ever be used")
 
     @property
     def mode(self) -> int:
-        return SPOT if self.bid_schedule is not None else PREEMPTIBLE
+        return SPOT if self.bid_table is not None else PREEMPTIBLE
+
+    @property
+    def n_buckets(self) -> int:
+        return 1 if self.bid_table is None else int(self.bid_table.shape[0])
 
     @property
     def J(self) -> int:
-        sched = (self.bid_schedule if self.bid_schedule is not None
-                 else self.worker_schedule)
-        return int(np.shape(sched)[0])
+        if self.bid_table is not None:
+            return int(self.bid_table.shape[1])
+        return int(np.shape(self.worker_schedule)[0])
 
     @property
     def n_workers(self) -> int:
-        if self.bid_schedule is not None:
-            return int(self.bid_schedule.shape[1])
-        return int(np.max(self.worker_schedule))
+        if self.bid_table is not None:
+            return int(self.bid_table.shape[2])
+        return max(int(np.max(self.worker_schedule)), self.n_fleet or 0)
 
     @classmethod
     def from_runtime(cls, rt, **kw) -> "Scenario":
@@ -187,7 +228,9 @@ class Scenario:
 class ScenarioBatch(NamedTuple):
     """Stacked scenarios (leading axis S) — a vmap-able pytree."""
 
-    bid_schedule: jnp.ndarray      # (S, J_max, N) f32, NEVER_BID-padded
+    bid_table: jnp.ndarray         # (S, B_max, J_max, N) f32, NEVER_BID-pad
+    bucket_starts: jnp.ndarray     # (S, B_max) f32, +inf-padded
+    replan_at: jnp.ndarray         # (S,) i32 (J_max+1 => never latch)
     worker_schedule: jnp.ndarray   # (S, J_max) i32
     mode: jnp.ndarray              # (S,) i32
     price_kind: jnp.ndarray        # (S,) i32
@@ -212,28 +255,38 @@ class ScenarioBatch(NamedTuple):
         return self.mode.shape[0]
 
     @property
+    def n_buckets(self) -> int:
+        return self.bid_table.shape[1]
+
+    @property
     def j_max(self) -> int:
-        return self.bid_schedule.shape[1]
+        return self.bid_table.shape[2]
 
     @property
     def n_max(self) -> int:
-        return self.bid_schedule.shape[2]
+        return self.bid_table.shape[3]
 
 
 def stack_scenarios(scenarios: Sequence[Scenario]) -> ScenarioBatch:
     """Pad and stack heterogeneous scenarios into one ScenarioBatch.
 
-    Bid schedules are padded to (J_max, N_max): extra workers get NEVER_BID,
-    iterations past a scenario's own J repeat its last row (they never run —
-    the engine stops at J — the repeat just keeps gathers in-bounds).
+    Bid tables are padded to (B_max, J_max, N_max): extra workers get
+    NEVER_BID, iterations past a scenario's own J repeat its last row and
+    buckets past its own B repeat its last bucket (neither is ever selected
+    — the engine stops at J, and padded bucket starts are +inf — the repeat
+    just keeps gathers in-bounds).
     """
     S = len(scenarios)
+    b_max = max(s.n_buckets for s in scenarios)
     j_max = max(s.J for s in scenarios)
     n_max = max(s.n_workers for s in scenarios)
     l_tr = max([len(s.price.trace) for s in scenarios
                 if s.price.trace is not None] or [1])
 
-    bid = np.full((S, j_max, n_max), NEVER_BID, np.float32)
+    bid = np.full((S, b_max, j_max, n_max), NEVER_BID, np.float32)
+    starts = np.full((S, b_max), np.inf, np.float32)
+    starts[:, 0] = 0.0
+    replan = np.full(S, j_max + 1, np.int32)
     wrk = np.zeros((S, j_max), np.int32)
     trc = np.zeros((S, l_tr), np.float32)
     tln = np.ones(S, np.int32)
@@ -252,10 +305,14 @@ def stack_scenarios(scenarios: Sequence[Scenario]) -> ScenarioBatch:
         mode[i] = s.mode
         pk[i] = s.price.kind
         rtk[i] = 0 if s.rt_kind == "exp" else 1
-        if s.bid_schedule is not None:
-            b = s.bid_schedule
-            bid[i, :b.shape[0], :b.shape[1]] = b
-            bid[i, b.shape[0]:, :b.shape[1]] = b[-1]
+        if s.bid_table is not None:
+            b = s.bid_table                       # (B, J, n)
+            bid[i, :b.shape[0], :b.shape[1], :b.shape[2]] = b
+            bid[i, :b.shape[0], b.shape[1]:, :b.shape[2]] = b[:, -1:]
+            bid[i, b.shape[0]:] = bid[i, b.shape[0] - 1]
+            starts[i, :len(s.bucket_starts)] = s.bucket_starts
+            if s.replan_at is not None:
+                replan[i] = s.replan_at
         else:
             w = np.asarray(s.worker_schedule, np.int32)
             wrk[i, :len(w)] = w
@@ -275,7 +332,8 @@ def stack_scenarios(scenarios: Sequence[Scenario]) -> ScenarioBatch:
                      ("idle_step", s.idle_step)]:
             cols[k][i] = v
     return ScenarioBatch(
-        bid_schedule=jnp.asarray(bid), worker_schedule=jnp.asarray(wrk),
+        bid_table=jnp.asarray(bid), bucket_starts=jnp.asarray(starts),
+        replan_at=jnp.asarray(replan), worker_schedule=jnp.asarray(wrk),
         mode=jnp.asarray(mode), price_kind=jnp.asarray(pk),
         trace=jnp.asarray(trc), trace_len=jnp.asarray(tln),
         rt_kind=jnp.asarray(rtk), J=jnp.asarray(J),
@@ -334,8 +392,55 @@ class SimConfig:
     """Static (compile-time) engine configuration."""
 
     n_ticks: int                 # market ticks to scan (≥ J + idle budget)
-    batch: int = 16              # per-worker minibatch size
+    batch: int = 16              # per-worker minibatch size (quad program)
     grad: str = "minibatch"      # "minibatch" | "full" (deterministic)
+
+
+@dataclasses.dataclass(frozen=True, eq=False)
+class ModelProgram:
+    """Pluggable model under the engine scan.
+
+    ``step_fn(model, data, key, mask, j, alpha) -> (new_model, metric)``
+    runs one training iteration: ``model`` is an arbitrary pytree (e.g.
+    ``(params, opt_state)``), ``data`` a pytree of device arrays shared
+    across all scenarios/seeds (problem constants, stacked batches),
+    ``mask`` the (n_max,) float32 active-worker mask, ``j`` the traced
+    iteration index, and ``alpha`` the scenario's step size (programs with
+    their own LR schedule may ignore it). ``metric`` is the float32 scalar
+    recorded in the per-iteration trajectory (error for the quadratic
+    oracle, batch loss for real models).
+
+    The engine gates the returned model on the iteration actually running
+    (``jnp.where`` over every leaf), so the step need not handle the
+    all-preempted / finished cases — idle ticks are true no-ops.
+
+    Instances hash by identity (``eq=False``) and are jit static arguments:
+    build them once (module constant / ``lru_cache``) or every call
+    recompiles.
+    """
+
+    step_fn: Callable[..., Any]
+    name: str = "program"
+
+
+@functools.lru_cache(maxsize=None)
+def quadratic_program(grad: str, batch: int) -> ModelProgram:
+    """The Theorem-1 quadratic oracle as a ModelProgram: model = the (d,)
+    SGD iterate, data = a JaxQuadratic, metric = error after the update."""
+
+    def step_fn(w, quad: JaxQuadratic, key, mask, j, alpha):
+        del j
+        n_max = mask.shape[0]
+        y = jnp.sum(mask)
+        if grad == "full":
+            g = quad.full_grad(w)
+        else:
+            gw = quad.minibatch_grads(key, w, n_max, batch)
+            g = jnp.sum(gw * mask[:, None], 0) / jnp.maximum(y, 1.0)
+        w_new = w - alpha * g
+        return w_new, quad.error(w_new)
+
+    return ModelProgram(step_fn=step_fn, name=f"quadratic-{grad}-{batch}")
 
 
 class SimState(NamedTuple):
@@ -343,10 +448,11 @@ class SimState(NamedTuple):
 
     t: jnp.ndarray               # wall clock
     j: jnp.ndarray               # iterations completed (i32)
+    bucket: jnp.ndarray          # latched plan-table bucket (i32, -1=unset)
     total_cost: jnp.ndarray
     total_idle: jnp.ndarray
-    w: jnp.ndarray               # (d,) SGD iterate
-    err_traj: jnp.ndarray        # (J_max,) error after iteration j
+    model: Any                   # pytree under ModelProgram.step_fn
+    err_traj: jnp.ndarray        # (J_max,) program metric after iteration j
     cost_traj: jnp.ndarray       # (J_max,) cumulative cost
     time_traj: jnp.ndarray       # (J_max,) wall clock
     y_traj: jnp.ndarray          # (J_max,) active workers
@@ -366,6 +472,13 @@ class EngineResult:
     total_cost: np.ndarray       # (S, R)
     total_idle: np.ndarray       # (S, R)
     J: np.ndarray                # (S,) per-scenario targets
+    final_model: Any = None      # device pytree, leaves stacked (S, R, ...)
+
+    @property
+    def losses(self) -> np.ndarray:
+        """Alias: for real-model programs the metric trajectory is the
+        per-iteration batch loss, not a suboptimality gap."""
+        return self.errors
 
     @property
     def completed(self) -> np.ndarray:
@@ -373,8 +486,14 @@ class EngineResult:
         return self.iterations >= self.J[:, None]
 
     def summary(self) -> Dict[str, np.ndarray]:
+        import warnings
+
         ys = np.where(np.isnan(self.ys), np.nan, np.maximum(self.ys, 1.0))
-        with np.errstate(invalid="ignore"):
+        with warnings.catch_warnings(), np.errstate(invalid="ignore"):
+            # all-NaN rows (scenarios that never ran an iteration within
+            # the tick budget) legitimately summarize to NaN — errstate
+            # alone does not silence nanmean's RuntimeWarning
+            warnings.simplefilter("ignore", RuntimeWarning)
             return {
                 "iterations": self.iterations,
                 "time": self.total_time,
@@ -406,12 +525,12 @@ def _draw_price(sc: ScenarioBatch, key, k, seed) -> jnp.ndarray:
                             p_unif)))
 
 
-def _sim_one(sc: ScenarioBatch, quad: JaxQuadratic, w0, seed,
+def _sim_one(sc: ScenarioBatch, model0, data, seed, program: ModelProgram,
              cfg: SimConfig):
     """Simulate one scenario × one seed (vmapped twice by `simulate`).
     ``sc`` holds per-scenario scalars/rows (leading S axis stripped)."""
-    j_max = sc.bid_schedule.shape[0]
-    n_max = sc.bid_schedule.shape[1]
+    j_max = sc.bid_table.shape[1]
+    n_max = sc.bid_table.shape[2]
     base = jax.random.fold_in(jax.random.PRNGKey(20), seed)
 
     def tick(state: SimState, k):
@@ -419,8 +538,15 @@ def _sim_one(sc: ScenarioBatch, quad: JaxQuadratic, w0, seed,
         k_price, k_dur, k_grad, k_up = jax.random.split(kk, 4)
         price = _draw_price(sc, k_price, k, seed)
 
+        # plan-table bucket: latched from the wall clock at the first tick
+        # of iteration `replan_at` (cf. DynamicBids consulting the clock
+        # once when it replans), 0 (the t=0 plan) before that
+        cur_bucket = jnp.sum(state.t >= sc.bucket_starts).astype(
+            jnp.int32) - 1
+        bucket = jnp.where((state.bucket < 0) & (state.j >= sc.replan_at),
+                           cur_bucket, state.bucket)
         row = jnp.minimum(state.j, j_max - 1)
-        bids = sc.bid_schedule[row]                        # (N,)
+        bids = sc.bid_table[jnp.maximum(bucket, 0), row]     # (N,)
         mask_spot = spot_active_mask(bids, price)
         prov = sc.worker_schedule[row]
         mask_pre = (jnp.arange(n_max) < prov) & preemptible_active(
@@ -442,18 +568,18 @@ def _sim_one(sc: ScenarioBatch, quad: JaxQuadratic, w0, seed,
                              0.0)
         dt = jnp.where(running, dur, jnp.where(idling, sc.idle_step, 0.0))
 
-        # SGD update: mean gradient over the active workers
-        if cfg.grad == "full":
-            g = quad.full_grad(state.w)
-        else:
-            gw = quad.minibatch_grads(k_grad, state.w, n_max, cfg.batch)
-            g = jnp.sum(gw * mask[:, None], 0) / jnp.maximum(y, 1.0)
-        w_new = jnp.where(running, state.w - sc.alpha * g, state.w)
+        # one model iteration; the update only lands when the iteration
+        # actually ran — idle/finished ticks are true no-ops on every leaf
+        stepped, metric = program.step_fn(
+            state.model, data, k_grad, mask.astype(jnp.float32), state.j,
+            sc.alpha)
+        model = jax.tree.map(
+            lambda new, old: jnp.where(running, new, old), stepped,
+            state.model)
 
         t_new = state.t + dt
         cost_new = state.total_cost + cost_inc
         idle_new = state.total_idle + jnp.where(idling, sc.idle_step, 0.0)
-        err = quad.error(w_new)
 
         idx = jnp.minimum(state.j, j_max - 1)
 
@@ -461,9 +587,9 @@ def _sim_one(sc: ScenarioBatch, quad: JaxQuadratic, w0, seed,
             return traj.at[idx].set(jnp.where(running, val, traj[idx]))
 
         new = SimState(
-            t=t_new, j=state.j + running.astype(jnp.int32),
-            total_cost=cost_new, total_idle=idle_new, w=w_new,
-            err_traj=put(state.err_traj, err),
+            t=t_new, j=state.j + running.astype(jnp.int32), bucket=bucket,
+            total_cost=cost_new, total_idle=idle_new, model=model,
+            err_traj=put(state.err_traj, metric),
             cost_traj=put(state.cost_traj, cost_new),
             time_traj=put(state.time_traj, t_new),
             y_traj=put(state.y_traj, y))
@@ -471,39 +597,69 @@ def _sim_one(sc: ScenarioBatch, quad: JaxQuadratic, w0, seed,
 
     nan_traj = jnp.full(j_max, jnp.nan, jnp.float32)
     init = SimState(t=jnp.float32(0.0), j=jnp.int32(0),
+                    bucket=jnp.int32(-1),
                     total_cost=jnp.float32(0.0), total_idle=jnp.float32(0.0),
-                    w=jnp.asarray(w0, jnp.float32),
+                    model=model0,
                     err_traj=nan_traj, cost_traj=nan_traj,
                     time_traj=nan_traj, y_traj=nan_traj)
     final, _ = lax.scan(tick, init, jnp.arange(cfg.n_ticks))
     return final
 
 
-@functools.partial(jax.jit, static_argnames=("cfg",))
-def _simulate_jit(batch: ScenarioBatch, quad: JaxQuadratic, w0, seeds,
-                  cfg: SimConfig):
-    over_seeds = jax.vmap(_sim_one, in_axes=(None, None, None, 0, None))
-    over_scenarios = jax.vmap(over_seeds, in_axes=(0, None, None, None,
+def _vmapped_sim(batch: ScenarioBatch, model0, data, seeds,
+                 program: ModelProgram, cfg: SimConfig, model_axis):
+    one = functools.partial(_sim_one, program=program, cfg=cfg)
+    over_seeds = jax.vmap(one, in_axes=(None, model_axis, None, 0))
+    over_scenarios = jax.vmap(over_seeds, in_axes=(0, model_axis, None,
                                                    None))
-    return over_scenarios(batch, quad, w0, seeds, cfg)
+    return over_scenarios(batch, model0, data, seeds)
 
 
-def simulate(scenarios, quad, w0, seeds, cfg: SimConfig) -> EngineResult:
-    """Run S scenarios × R seeds in one compiled call.
+@functools.partial(jax.jit, static_argnames=("program", "cfg"))
+def _simulate_jit(batch, model0, data, seeds, program, cfg):
+    return _vmapped_sim(batch, model0, data, seeds, program, cfg,
+                        model_axis=None)
 
-    scenarios: ScenarioBatch or list[Scenario]; quad: QuadraticProblem or
-    JaxQuadratic; seeds: int count or explicit sequence.
-    Returns stacked (S, R, J_max) trajectories.
+
+@functools.partial(jax.jit, static_argnames=("program", "cfg"),
+                   donate_argnames=("model0",))
+def _simulate_jit_donated(batch, model0, data, seeds, program, cfg):
+    # model0 arrives pre-broadcast to (S, R, ...) so the donated buffers
+    # exactly match the scan carry / final-model outputs and XLA can reuse
+    # them in place (a broadcast shape would make donation a silent no-op)
+    return _vmapped_sim(batch, model0, data, seeds, program, cfg,
+                        model_axis=0)
+
+
+def simulate_program(scenarios, program: ModelProgram, model0, data, seeds,
+                     cfg: SimConfig, donate: bool = False) -> EngineResult:
+    """Run S scenarios × R seeds of an arbitrary ModelProgram in one
+    compiled call.
+
+    model0: initial model pytree, shared by every (scenario, seed) replica
+    (the scan carry fans it out); data: device pytree visible to every step
+    (problem constants / stacked batches); seeds: int count or explicit
+    sequence. With ``donate=True`` the model0 buffers are donated to the
+    call (pass a fresh copy if you need them afterwards).
+    Returns stacked (S, R, J_max) trajectories plus the per-replica final
+    model (leaves shaped (S, R, ...), left on device).
     """
     if not isinstance(scenarios, ScenarioBatch):
         scenarios = stack_scenarios(scenarios)
-    if not isinstance(quad, JaxQuadratic):
-        quad = jax_quadratic(quad)
     if np.isscalar(seeds):
         seeds = np.arange(int(seeds))
     seeds = jnp.asarray(np.asarray(seeds, np.int32))
-    final = _simulate_jit(scenarios, quad, jnp.asarray(w0, jnp.float32),
-                          seeds, cfg)
+    if donate:
+        grid = (scenarios.n_scenarios, len(seeds))
+        # broadcast_to is eager under JAX: this materializes the (S, R)
+        # replica grid once on device, and those buffers are donated
+        model0 = jax.tree.map(
+            lambda x: jnp.broadcast_to(jnp.asarray(x),
+                                       grid + jnp.shape(x)), model0)
+        final = _simulate_jit_donated(scenarios, model0, data, seeds,
+                                      program, cfg)
+    else:
+        final = _simulate_jit(scenarios, model0, data, seeds, program, cfg)
     return EngineResult(
         errors=np.asarray(final.err_traj),
         costs=np.asarray(final.cost_traj),
@@ -513,7 +669,24 @@ def simulate(scenarios, quad, w0, seeds, cfg: SimConfig) -> EngineResult:
         total_time=np.asarray(final.t),
         total_cost=np.asarray(final.total_cost),
         total_idle=np.asarray(final.total_idle),
-        J=np.asarray(scenarios.J))
+        J=np.asarray(scenarios.J),
+        final_model=final.model)
+
+
+def simulate(scenarios, quad, w0, seeds, cfg: SimConfig) -> EngineResult:
+    """Run S scenarios × R seeds on the quadratic oracle in one compiled
+    call (the original engine entry point; `simulate_program` is the
+    general form).
+
+    scenarios: ScenarioBatch or list[Scenario]; quad: QuadraticProblem or
+    JaxQuadratic; seeds: int count or explicit sequence.
+    Returns stacked (S, R, J_max) trajectories.
+    """
+    if not isinstance(quad, JaxQuadratic):
+        quad = jax_quadratic(quad)
+    return simulate_program(
+        scenarios, quadratic_program(cfg.grad, cfg.batch),
+        jnp.asarray(w0, jnp.float32), quad, seeds, cfg)
 
 
 # --------------------------------------------------------------------------
@@ -531,24 +704,32 @@ def scenario_from_strategy(strategy, *, alpha: float, rt,
                            name: str = "") -> Scenario:
     """Compile a core.strategies.Strategy into a batchable Scenario.
 
-    Spot strategies (``bids``) become a stacked bid schedule against the
+    Spot strategies (``bids``) become a precomputed plan table against the
     price distribution ``dist`` (or an explicit ``price_spec``, e.g. a
-    tick-replayed trace); provisioning strategies (``workers``) become a
-    worker schedule under exogenous preemption probability ``q``.
+    tick-replayed trace) — time-adaptive strategies (``DynamicBids``)
+    resolve to one bid schedule per coarse elapsed-time bucket, latched by
+    the engine at replan time; provisioning strategies (``workers``) become
+    a worker schedule under exogenous preemption probability ``q``.
     """
     J = J or strategy.total_iterations
     name = name or getattr(strategy, "name", "")
     if q is None:
-        sched = strategy.bid_schedule(J, n_max=n_max)
+        table = strategy.plan_table(J, n_max=n_max)
         if idle_step is None:
-            idle_step = rt.expected(max(sched.shape[1], 1))
+            idle_step = rt.expected(max(table.bids.shape[2], 1))
         return Scenario.from_runtime(
             rt, price=price_spec or PriceSpec.from_dist(dist), alpha=alpha,
-            bid_schedule=sched, idle_step=idle_step, name=name)
+            bid_table=table.bids, bucket_starts=table.starts,
+            replan_at=table.replan_at, idle_step=idle_step, name=name)
     wsched = strategy.worker_schedule(J)
+    if n_max is not None:
+        # match the legacy loop: provisioning never exceeds the fleet, and
+        # the active mask is padded to the full fleet width (so e.g. the
+        # elastic trainer's worker slices all get a mask entry)
+        wsched = np.minimum(wsched, n_max)
     return Scenario.from_runtime(
         rt, price=PriceSpec.uniform(0.0, 1.0), alpha=alpha,
-        worker_schedule=wsched, preempt_q=q,
+        worker_schedule=wsched, preempt_q=q, n_fleet=n_max,
         on_demand_price=on_demand_price,
         idle_step=idle_step if idle_step is not None else rt.expected(1),
         name=name)

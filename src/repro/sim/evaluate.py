@@ -132,6 +132,26 @@ def run_preemptible_strategy(quad: QuadraticProblem, w0: np.ndarray,
 # --------------------------------------------------------------------------
 
 
+def nanmean(x: np.ndarray, axis=None) -> np.ndarray:
+    """np.nanmean without the all-NaN RuntimeWarning — all-NaN slices are
+    legitimate engine output (iterations no seed reached within the tick
+    budget) and map to NaN."""
+    import warnings
+
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore", RuntimeWarning)
+        return np.nanmean(x, axis=axis)
+
+
+def nanstd(x: np.ndarray, axis=None) -> np.ndarray:
+    """np.nanstd with the same all-NaN / zero-dof silencing as `nanmean`."""
+    import warnings
+
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore", RuntimeWarning)
+        return np.nanstd(x, axis=axis)
+
+
 def _first_at_or_below(errors: np.ndarray, values: np.ndarray,
                        eps: float) -> float:
     """``values`` at the first index where ``errors`` ≤ eps (NaN-safe);
@@ -187,10 +207,9 @@ class BatchResult:
         i = self.index(name)
         r = self.result
         J = int(r.J[i])
-        with np.errstate(invalid="ignore"):
-            errors = np.nanmean(r.errors[i, :, :J], axis=0)
-            costs = np.nanmean(r.costs[i, :, :J], axis=0)
-            times = np.nanmean(r.times[i, :, :J], axis=0)
+        errors = nanmean(r.errors[i, :, :J], axis=0)
+        costs = nanmean(r.costs[i, :, :J], axis=0)
+        times = nanmean(r.times[i, :, :J], axis=0)
         cost_m, cost_ci = _mean_ci(r.total_cost[i])
         time_m, time_ci = _mean_ci(r.total_time[i])
         err_m, err_ci = _mean_ci(r.errors[i, :, J - 1])
@@ -234,6 +253,11 @@ def evaluate_batch(strategies: Mapping[str, Strategy],
     are "<strategy>@<market>".
     """
     if isinstance(scenarios, Mapping):
+        if rt is None:
+            raise ValueError(
+                "rt (RuntimeModel) is required when scenarios are given as "
+                "a market-name → PriceDist mapping; it is only optional "
+                "with pre-built engine.Scenario objects")
         built: List[engine.Scenario] = []
         for mname, dist in scenarios.items():
             for sname, strat in strategies.items():

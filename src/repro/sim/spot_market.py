@@ -14,7 +14,7 @@ from typing import Optional
 import numpy as np
 
 from repro.core.cost_model import EmpiricalPrice, PriceDist
-from repro.sim.engine import spot_active_mask
+from repro.sim.market_core import spot_active_mask
 
 
 class PriceProcess:

@@ -4,23 +4,21 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from repro.core.elastic import example_weights
+from repro.core.elastic import example_weights, weighted_mean
 
 
 def next_token_loss(logits, labels, weights=None):
     """Cross entropy of logits (B,S,V) vs labels (B,S) with optional
     per-token weights (B,S). Normalizes by Σ weights (the masked worker
-    average of Eq. (5))."""
-    v = logits.shape[-1]
+    average of Eq. (5)); all-masked batches are exactly 0 — see
+    `core.elastic.weighted_mean`."""
     lse = jax.nn.logsumexp(logits.astype(jnp.float32), axis=-1)
     gold = jnp.take_along_axis(logits.astype(jnp.float32),
                                labels[..., None], axis=-1)[..., 0]
     nll = lse - gold
     if weights is None:
         weights = jnp.ones_like(nll)
-    weights = weights.astype(jnp.float32)
-    denom = jnp.maximum(weights.sum(), 1e-6)
-    return (nll * weights).sum() / denom
+    return weighted_mean(nll, weights.astype(jnp.float32))
 
 
 def elastic_token_weights(active_mask, batch_size: int, seq_len: int,

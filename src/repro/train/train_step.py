@@ -55,7 +55,11 @@ def make_train_step(cfg: ModelConfig, job: JobConfig,
                 loss = nll_sum / jnp.maximum(w_sum, 1e-6)
                 if cfg.moe is not None:
                     loss = loss + cfg.moe.aux_loss_weight * aux
-                return loss, aux
+                # exact 0 (value and grads, incl. the MoE router through
+                # the aux term) when every worker is preempted — the
+                # mechanism behind core.elastic.weighted_mean, and the
+                # same semantics as the microbatch path's aux·w_sum fold
+                return jnp.where(w_sum > 0, loss, 0.0), aux
 
             (loss, aux), grads = jax.value_and_grad(loss_fn, has_aux=True)(
                 params)
@@ -100,7 +104,7 @@ def make_train_step(cfg: ModelConfig, job: JobConfig,
             denom = jnp.maximum(w_sum, 1e-6)
             grads = jax.tree.map(lambda g: g / denom, g_sum)
             aux = aux_sum / n_micro
-            loss = nll_sum / denom
+            loss = jnp.where(w_sum > 0, nll_sum / denom, 0.0)
 
         lr = lr_fn(step)
         new_params, new_opt = opt.update(grads, opt_state, params, lr)

@@ -1,6 +1,20 @@
 """The elastic trainer: wires the spot-market/cluster simulator, the paper's
 strategies, the elastic train step, and checkpointing into one loop.
 
+Two execution paths share the same step function:
+
+* ``ElasticTrainer.run`` — the legacy per-iteration Python loop over the
+  discrete-event ``VolatileCluster``. Kept as the exact-semantics path
+  (checkpoint/restore, serve parity, dynamic strategies consulting the real
+  clock).
+* ``train_batched`` / ``ElasticTrainer.run_batched`` — the scan-native
+  path: the elastic masked train step is folded into the batched engine's
+  per-tick step, so an S-strategy × R-seed grid trains real (reduced)
+  models end-to-end inside ONE ``lax.scan``+``vmap`` jit — price draw,
+  bid→active-mask, masked-renormalized SGD update, and time/cost/idle
+  accounting all on device, with donated model buffers and no host sync
+  between ticks.
+
 Runs real (reduced) models on CPU for tests/examples/benchmarks; on hardware
 the same loop drives the full mesh (the step function is identical — the
 dry-run compiles it for the production mesh).
@@ -8,7 +22,8 @@ dry-run compiles it for the production mesh).
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable, Dict, List, Optional
+import functools
+from typing import Callable, Dict, List, Mapping, Optional, Sequence, Union
 
 import jax
 import jax.numpy as jnp
@@ -17,9 +32,18 @@ import numpy as np
 from repro.configs.base import JobConfig
 from repro.core.strategies import Strategy
 from repro.data.synthetic import lm_batch
+from repro.sim import engine
 from repro.sim.cluster import VolatileCluster
 from repro.train import checkpoint as ckpt_mod
 from repro.train.train_step import init_train_state, make_train_step
+
+
+@functools.lru_cache(maxsize=32)
+def jit_train_step(job: JobConfig):
+    """Jitted elastic train step, cached on the (hashable) JobConfig so
+    trainers over the same job share one compilation instead of paying it
+    per ElasticTrainer instance."""
+    return jax.jit(make_train_step(job.model, job, remat="none"))
 
 
 @dataclasses.dataclass
@@ -43,7 +67,7 @@ class ElasticTrainer:
 
     def __post_init__(self):
         cfg = self.job.model
-        self._step_fn = jax.jit(make_train_step(cfg, self.job, remat="none"))
+        self._step_fn = jit_train_step(self.job)
         key = jax.random.PRNGKey(self.job.seed)
         self.params, self.opt_state = init_train_state(cfg, self.job, key)
         self.log: List[TrainLogEntry] = []
@@ -99,3 +123,139 @@ class ElasticTrainer:
         s["final_loss"] = self.log[-1].loss if self.log else float("nan")
         s["log"] = self.log
         return s
+
+    # ------------------------------------------------------- batched path
+
+    def run_batched(self, seeds: Union[int, Sequence[int]] = 8,
+                    iterations: Optional[int] = None,
+                    strategies: Optional[Mapping[str, Strategy]] = None,
+                    n_ticks: Optional[int] = None,
+                    n_batches: Optional[int] = None,
+                    batch_fn: Optional[Callable[[int], Dict]] = None):
+        """Scan-native training: the trainer's market/runtime plus a grid of
+        strategies (default: its own) × seeds, every configuration training
+        a real model end-to-end in one compiled call.
+
+        Each (strategy, seed) replica starts from the job's deterministic
+        init (``PRNGKey(job.seed)``) — the same state a fresh ``run()``
+        would start from — and consumes the same deterministic batch stream
+        (``lm_batch`` indexed by iteration, or ``batch_fn``). Returns a
+        `repro.sim.evaluate.BatchResult` whose per-iteration "errors" are
+        the batch losses.
+        """
+        from repro.sim.evaluate import BatchResult
+
+        strategies = strategies or {self.strategy.name: self.strategy}
+        scenarios = [self._scenario(s, iterations, name)
+                     for name, s in strategies.items()]
+        res = train_batched(
+            self.job, scenarios, seeds, n_ticks=n_ticks,
+            n_batches=n_batches, batch_fn=batch_fn, batch_seed=self.seed)
+        return BatchResult(names=[s.name for s in scenarios], result=res)
+
+    def _scenario(self, strategy: Strategy, iterations: Optional[int],
+                  name: str) -> engine.Scenario:
+        """Compile one strategy against this trainer's cluster (market,
+        runtime, idle step) into a batchable Scenario."""
+        cl = self.cluster
+        if self.mode == "spot":
+            return engine.scenario_from_strategy(
+                strategy, alpha=self.job.learning_rate, rt=cl.runtime,
+                price_spec=price_spec_from_market(cl.market),
+                n_max=self.job.n_workers, idle_step=cl.idle_step,
+                J=iterations, name=name)
+        return engine.scenario_from_strategy(
+            strategy, alpha=self.job.learning_rate, rt=cl.runtime,
+            q=cl.preempt_q or 0.0, on_demand_price=cl.on_demand_price,
+            n_max=self.job.n_workers, idle_step=cl.idle_step, J=iterations,
+            name=name)
+
+
+def price_spec_from_market(market) -> engine.PriceSpec:
+    """Map a legacy SpotMarket's price process onto a batchable PriceSpec:
+    IIDPrices → its distribution; Trace/TickPrices → tick-replay of the
+    trace (the engine consumes one entry per tick, so TickPrices gives
+    tick-exact parity)."""
+    proc = market.process
+    if hasattr(proc, "dist"):
+        return engine.PriceSpec.from_dist(proc.dist)
+    if hasattr(proc, "trace"):
+        return engine.PriceSpec.from_trace(proc.trace)
+    raise TypeError(f"no batchable PriceSpec for {type(proc).__name__}")
+
+
+@functools.lru_cache(maxsize=32)
+def make_train_program(job: JobConfig, n_batches: int) -> engine.ModelProgram:
+    """The elastic masked train step as an engine ModelProgram.
+
+    model = (params, opt_state); data = the batch stream stacked on a
+    leading (n_batches,) axis, indexed by ``j % n_batches`` inside the scan
+    (deterministic — matches the legacy loop's ``lm_batch(..., index=j)``
+    when ``n_batches >= J``). The scenario's ``alpha`` is ignored: the LR
+    comes from the job, exactly as in ``ElasticTrainer.run``. Cached so
+    repeated grids over the same job reuse one compilation.
+    """
+    step = make_train_step(job.model, job, remat="none")
+
+    def step_fn(model, data, key, mask, j, alpha):
+        del key, alpha
+        params, opt_state = model
+        batch = jax.tree.map(lambda x: x[j % n_batches], data)
+        new_params, new_opt, metrics = step(params, opt_state, batch, mask,
+                                            j)
+        return (new_params, new_opt), metrics["loss"]
+
+    return engine.ModelProgram(step_fn=step_fn,
+                               name=f"train-{job.model.name}-{n_batches}")
+
+
+def stack_batches(job: JobConfig, n_batches: int, seed: int = 0,
+                  batch_fn: Optional[Callable[[int], Dict]] = None):
+    """Device-stack the first ``n_batches`` training batches on a leading
+    axis — the engine data pytree the scan indexes by iteration."""
+    shape = job.shape
+    batches = [batch_fn(j) if batch_fn else
+               lm_batch(job.model, shape.global_batch, shape.seq_len, j,
+                        seed=seed)
+               for j in range(n_batches)]
+    return {k: jnp.asarray(np.stack([np.asarray(b[k]) for b in batches]))
+            for k in batches[0]}
+
+
+def train_batched(job: JobConfig,
+                  scenarios: Union[engine.ScenarioBatch,
+                                   Sequence[engine.Scenario]],
+                  seeds: Union[int, Sequence[int]] = 8, *,
+                  n_ticks: Optional[int] = None,
+                  n_batches: Optional[int] = None,
+                  batch_fn: Optional[Callable[[int], Dict]] = None,
+                  batch_seed: int = 0,
+                  donate: bool = True) -> engine.EngineResult:
+    """Train a real model under every scenario × seed in one compiled call.
+
+    Folds the elastic masked train step into the batched engine: the whole
+    run — price draw, bid→active-mask, masked-renormalized SGD update,
+    time/cost/idle accounting — executes inside one ``lax.scan``, vmapped
+    over stacked scenarios and seeds. The initial (params, opt_state) is
+    donated to the call by default (it is rebuilt per call from
+    ``PRNGKey(job.seed)``, so nothing is lost).
+
+    Returns an EngineResult whose ``errors``/``losses`` trajectory holds
+    the per-iteration batch loss and whose ``final_model`` stacks the
+    trained (params, opt_state) per replica on a leading (S, R) axis.
+    """
+    if not isinstance(scenarios, engine.ScenarioBatch):
+        scenarios = engine.stack_scenarios(scenarios)
+    if scenarios.n_max != job.n_workers:
+        raise ValueError(
+            f"scenario fleet width {scenarios.n_max} != job.n_workers "
+            f"{job.n_workers}: the elastic mask must cover every worker "
+            "slice")
+    j_max = scenarios.j_max
+    n_batches = n_batches or j_max
+    data = stack_batches(job, n_batches, seed=batch_seed, batch_fn=batch_fn)
+    program = make_train_program(job, n_batches)
+    model0 = init_train_state(job.model, job, jax.random.PRNGKey(job.seed))
+    cfg = engine.SimConfig(n_ticks=n_ticks or 2 * j_max + 16)
+    return engine.simulate_program(scenarios, program, model0, data, seeds,
+                                   cfg, donate=donate)

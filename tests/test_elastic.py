@@ -31,6 +31,20 @@ def test_mask_from_bids():
     np.testing.assert_array_equal(mask_from_bids(bids, 0.5), [1, 0, 1])
 
 
+def test_weighted_mean_all_preempted_is_exact_zero():
+    """Regression: the old ε-denominator returned Σw·v/1e-9 — zero in value
+    for 0/1 masks but with a huge d/dw gradient (v/1e-9) leaking through an
+    all-preempted step. Both the value and every gradient must be exactly
+    zero when no worker is active."""
+    v = jnp.arange(1.0, 9.0)
+    zeros = jnp.zeros(8)
+    assert float(weighted_mean(v, zeros)) == 0.0
+    g_v = jax.grad(lambda x: weighted_mean(x, zeros))(v)
+    g_w = jax.grad(lambda w: weighted_mean(v, w))(zeros)
+    np.testing.assert_array_equal(np.asarray(g_v), 0.0)
+    np.testing.assert_array_equal(np.asarray(g_w), 0.0)
+
+
 @pytest.mark.parametrize("arch", ["deepseek-7b", "qwen2-moe-a2.7b"])
 def test_masked_step_equals_subbatch_step(arch):
     """Gradient with mask == gradient computed on only the active workers'

@@ -1,0 +1,116 @@
+"""Precomputed plan tables in the engine scan: bucket selection is latched
+from the wall clock at ``replan_at`` and frozen afterwards — the scan-body
+analogue of the legacy ``DynamicBids`` replan-on-actual-elapsed-time."""
+import numpy as np
+import pytest
+
+from repro.core import convergence as conv, strategies as strat
+from repro.core.cost_model import RuntimeModel, UniformPrice
+from repro.data.synthetic import QuadraticProblem
+from repro.sim import engine
+
+J = 10
+NB = strat.NEVER_BID
+
+
+@pytest.fixture(scope="module")
+def problem():
+    quad = QuadraticProblem(dim=6, n_samples=64, cond=5.0, noise=0.2, seed=0)
+    return quad, quad.w_star + 1.0, 0.4 / quad.L
+
+
+def _table_scenario(r_const, trace_price=0.55):
+    """3 buckets latched at iteration 4: elapsed time at the switch decides
+    whether the job bids 0.3 (dies), [0.6, never] (y=1) or [0.9, 0.9]
+    (y=2). Deterministic runtime r_const sets the switch-time bucket."""
+    table = np.empty((3, J, 2), np.float32)
+    table[:, :4] = [0.7, 0.7]                  # stage 1: both active
+    table[0, 4:] = [0.3, NB]                   # bucket [0, 5): below price
+    table[1, 4:] = [0.6, NB]                   # bucket [5, 10): one worker
+    table[2, 4:] = [0.9, 0.9]                  # bucket [10, ∞): both
+    return engine.Scenario(
+        price=engine.PriceSpec.from_trace(
+            np.full(64, trace_price, np.float32)),
+        alpha=0.0, bid_table=table, bucket_starts=np.array([0.0, 5.0, 10.0]),
+        replan_at=4, rt_kind="det", rt_const=r_const, idle_step=0.25)
+
+
+@pytest.mark.parametrize("r_const,expect_iters,expect_y", [
+    (1.0, 4, None),    # t=4 at switch → bucket 0 → bid 0.3 < price: stuck
+    (2.0, J, 1.0),     # t=8 at switch → bucket 1 → one active worker
+    (3.0, J, 2.0),     # t=12 at switch → bucket 2 → both active
+], ids=["bucket0-dies", "bucket1-one-worker", "bucket2-two-workers"])
+def test_bucket_latched_at_replan_time(problem, r_const, expect_iters,
+                                       expect_y):
+    quad, w0, alpha = problem
+    sc = _table_scenario(r_const)
+    res = engine.simulate([sc], quad, w0, [0],
+                          engine.SimConfig(n_ticks=60, grad="full"))
+    assert res.iterations[0, 0] == expect_iters
+    if expect_y is not None:
+        # the bucket is frozen at the switch: even after the clock crosses
+        # later bucket boundaries the active count must not change
+        assert (res.ys[0, 0, 4:J] == expect_y).all()
+        assert res.times[0, 0, -1] > 10.0      # clock did cross bucket 2
+
+
+def test_one_bucket_table_is_plain_schedule(problem):
+    """A (1, J, n) bid_table behaves exactly like the (J, n) bid_schedule
+    it wraps."""
+    quad, w0, alpha = problem
+    sched = np.tile([0.8, 0.45], (J, 1)).astype(np.float32)
+    trace = np.linspace(0.3, 0.9, 37).astype(np.float32)
+    cfg = engine.SimConfig(n_ticks=40, grad="full")
+    kw = dict(price=engine.PriceSpec.from_trace(trace), alpha=alpha,
+              rt_kind="det", rt_const=1.0, idle_step=0.5)
+    a = engine.simulate([engine.Scenario(bid_schedule=sched, **kw)],
+                        quad, w0, [0], cfg)
+    b = engine.simulate([engine.Scenario(bid_table=sched[None], **kw)],
+                        quad, w0, [0], cfg)
+    np.testing.assert_array_equal(a.costs, b.costs)
+    np.testing.assert_array_equal(a.errors, b.errors)
+
+
+def test_dynamic_bids_plan_table_mechanics():
+    """DynamicBids resolves to one stage-2 replan per elapsed-time bucket:
+    stage-1 rows identical across buckets, replan_at = switch_at, buckets
+    span [0, θ]."""
+    prob = conv.SGDProblem(alpha=0.05, c=1.0, mu=1.0, L=2.0, M=4.0, G0=10.0)
+    rt = RuntimeModel(kind="exp", lam=2.0, delta=0.05)
+    dist = UniformPrice(0.2, 1.0)
+    eps = 0.5
+    n = 8
+    j_min = conv.phi_inverse(prob, eps, 1.0 / n)
+    theta = 3.0 * j_min * rt.expected(n)
+    dyn = strat.DynamicBids(prob, eps, theta, dist, rt, stage1=(2, 4),
+                            stage2=(4, 8), switch_at=max(2, j_min // 2))
+    tbl = dyn.plan_table(n_buckets=5)
+    Jd = dyn.total_iterations
+    assert tbl.bids.shape == (5, Jd, 8)
+    assert tbl.replan_at == dyn.switch_at
+    assert tbl.starts[0] == 0.0 and tbl.starts[-1] == pytest.approx(theta)
+    # pre-switch rows are the stage-1 plan in every bucket
+    for b in range(5):
+        np.testing.assert_array_equal(tbl.bids[b, :dyn.switch_at],
+                                      tbl.bids[0, :dyn.switch_at])
+    # stage-1 fleet is (n1=2, n=4): workers 4..7 are absent before switch
+    assert (tbl.bids[0, 0, 4:] == NB).all()
+    # stage-2 fleet is padded to 8 workers with real bids
+    assert (tbl.bids[0, dyn.switch_at] > NB).all()
+
+
+def test_stacked_mixed_tables_and_schedules(problem):
+    """stack_scenarios pads a 3-bucket table and a plain schedule into one
+    batch without perturbing either result."""
+    quad, w0, alpha = problem
+    sched = np.tile([0.8, 0.45], (J, 1)).astype(np.float32)
+    plain = engine.Scenario(price=engine.PriceSpec.uniform(0.4, 0.7),
+                            alpha=alpha, bid_schedule=sched,
+                            rt_kind="det", rt_const=1.0, idle_step=0.5)
+    table = _table_scenario(2.0)
+    cfg = engine.SimConfig(n_ticks=60, grad="full")
+    both = engine.simulate([plain, table], quad, w0, [0], cfg)
+    alone = engine.simulate([table], quad, w0, [0], cfg)
+    np.testing.assert_array_equal(both.costs[1], alone.costs[0])
+    solo = engine.simulate([plain], quad, w0, [0], cfg)
+    np.testing.assert_array_equal(both.costs[0], solo.costs[0])

@@ -65,3 +65,37 @@ def test_multibid_simulated_cost_matches_expectation():
             cluster.next_iteration_spot(j, plan.bids)
         costs.append(cluster.summary()["cost"])
     assert np.mean(costs) == pytest.approx(plan.expected_cost, rel=0.2)
+
+
+def test_multibid_k_levels_on_batched_engine():
+    """K=1..4 optimized plans run as FixedBids scenarios on the vectorized
+    engine (`Scenario.bid_schedule` with >2 levels): every K completes, the
+    seed-mean simulated cost tracks the plan's expectation, and more bid
+    levels never cost meaningfully more."""
+    from repro.core import strategies as strat
+    from repro.data.synthetic import QuadraticProblem
+    from repro.sim import engine
+
+    quad = QuadraticProblem(dim=6, n_samples=64, cond=5.0, noise=0.2, seed=0)
+    w0 = quad.w_star + 1.0
+    eps, theta, n = 0.5, 800.0, 8
+    J = conv.phi_inverse(PROB, eps, 1.0 / n) + 10
+    groups = {1: (8,), 2: (4, 4), 3: (2, 3, 3), 4: (2, 2, 2, 2)}
+    plans = {k: multibid.optimize_multibid(PROB, eps, theta, g, J, DIST, RT)
+             for k, g in groups.items()}
+    scenarios = [engine.scenario_from_strategy(
+        strat.FixedBids(plans[k], name=f"K{k}"), alpha=0.4 / quad.L, rt=RT,
+        dist=DIST, n_max=n) for k in groups]
+    # tick budget: an iteration runs once the price dips below b1, so the
+    # expected ticks per iteration is 1/F(b1) — give 3x that plus slack
+    f_min = min(DIST.cdf(p.bid_levels[0]) for p in plans.values())
+    res = engine.simulate(scenarios, quad, w0, 12,
+                          engine.SimConfig(n_ticks=int(3 * J / f_min) + 64,
+                                           grad="full"))
+    assert res.completed.all()
+    sim_cost = res.total_cost.mean(axis=1)
+    for i, k in enumerate(groups):
+        assert sim_cost[i] == pytest.approx(plans[k].expected_cost, rel=0.25)
+    # the K-level optimizer's gains survive simulation (within seed noise)
+    assert sim_cost[3] <= sim_cost[0] * 1.05
+    assert sim_cost[1] <= sim_cost[0] * 1.05

@@ -1,0 +1,177 @@
+"""Scan-native trainer ↔ legacy ElasticTrainer parity, and engine-level
+no-op semantics for idle iterations.
+
+Given the same seed-derived price sequence (consumed one entry per market
+tick on both sides via `TickPrices` / `PriceSpec.from_trace`), a
+deterministic runtime, and the same deterministic batch stream, the batched
+trainer's (loss, cost, time) trajectories must match the legacy
+per-iteration Python loop within float32 tolerance — the real-model
+counterpart of tests/test_engine_parity.py.
+"""
+import numpy as np
+import pytest
+
+import jax
+
+from repro.configs import ARCHS
+from repro.configs.base import InputShape, JobConfig
+from repro.core import bidding, strategies as strat
+from repro.core.cost_model import RuntimeModel, UniformPrice
+from repro.sim import engine
+from repro.sim.cluster import VolatileCluster
+from repro.sim.spot_market import IIDPrices, SpotMarket, TickPrices
+from repro.train.trainer import (ElasticTrainer, price_spec_from_market,
+                                 train_batched)
+
+J = 12
+N_W = 4
+
+
+def _tiny_job(n_workers=N_W, b=8, s=16):
+    cfg = ARCHS["qwen2-7b"].reduced().with_(
+        d_model=64, num_heads=2, num_kv_heads=1, d_ff=128, vocab_size=256,
+        head_dim=32)
+    return JobConfig(model=cfg, shape=InputShape("t", s, b, "train"),
+                     n_workers=n_workers, learning_rate=0.1)
+
+
+def _fixed(bids, J=J, name="fixed"):
+    bids = np.asarray(bids, float)
+    n1 = int(np.sum(bids == bids[0]))
+    return strat.FixedBids(bidding.BidPlan(
+        n=len(bids), n1=n1, b1=float(bids[0]), b2=float(bids[-1]),
+        J=J, expected_cost=0, expected_time=0, expected_error=0), name=name)
+
+
+@pytest.fixture(scope="module")
+def job():
+    return _tiny_job()
+
+
+def test_batched_trainer_matches_legacy_loop(job):
+    """Loss/cost/time trajectories pinned to the legacy loop on a shared
+    tick-replayed price trace (both paths consume one entry per tick)."""
+    dist = UniformPrice(0.2, 1.0)
+    trace = dist.sample(np.random.default_rng(7), size=200).astype(
+        np.float32)
+    rt = RuntimeModel(kind="det", r_const=1.0)
+    plan = _fixed([0.9, 0.9, 0.5, 0.5], name="two-bids")
+
+    legacy = ElasticTrainer(
+        job=job, strategy=plan, mode="spot",
+        cluster=VolatileCluster(n_workers=N_W, runtime=rt, idle_step=0.5,
+                                market=SpotMarket(TickPrices(trace))))
+    summary = legacy.run(iterations=J)
+    legacy_losses = np.array([e.loss for e in summary["log"]])
+    legacy_times = np.array([e.time for e in summary["log"]])
+    legacy_ys = np.array([e.y for e in summary["log"]])
+
+    batched = ElasticTrainer(
+        job=job, strategy=plan, mode="spot",
+        cluster=VolatileCluster(n_workers=N_W, runtime=rt, idle_step=0.5,
+                                market=SpotMarket(TickPrices(trace))))
+    bres = batched.run_batched(seeds=[0], iterations=J, n_ticks=60)
+    r = bres.result
+
+    assert r.iterations[0, 0] == J == summary["iterations"]
+    np.testing.assert_allclose(r.losses[0, 0, :J], legacy_losses,
+                               rtol=1e-4, atol=1e-5)
+    np.testing.assert_allclose(r.times[0, 0, :J], legacy_times,
+                               rtol=1e-5, atol=1e-4)
+    assert r.total_cost[0, 0] == pytest.approx(summary["cost"], rel=1e-4)
+    assert r.total_idle[0, 0] == pytest.approx(summary["idle"], rel=1e-5,
+                                               abs=1e-4)
+    np.testing.assert_array_equal(r.ys[0, 0, :J], legacy_ys)
+
+
+def test_batched_trainer_grid_multiseed(job):
+    """A strategy grid × seeds trains real models in one compiled call:
+    per-cell trajectories are complete, loss decreases, seeds vary."""
+    rt = RuntimeModel(kind="exp", lam=2.0, delta=0.05)
+    grid = {"high": _fixed([1.0] * N_W, name="high"),
+            "split": _fixed([1.0, 1.0, 0.5, 0.5], name="split")}
+    trainer = ElasticTrainer(
+        job=job, strategy=grid["high"], mode="spot",
+        cluster=VolatileCluster(
+            n_workers=N_W, runtime=rt, idle_step=0.5,
+            market=SpotMarket(IIDPrices(UniformPrice(0.2, 1.0), seed=0))))
+    bres = trainer.run_batched(seeds=2, iterations=J, strategies=grid,
+                               n_ticks=80)
+    r = bres.result
+    assert r.losses.shape == (2, 2, J)
+    assert (r.iterations == J).all()
+    assert np.isfinite(r.losses).all()
+    # training progresses in every cell
+    assert (r.losses[:, :, -1] < r.losses[:, :, 0]).all()
+    # the full-fleet strategy pays more than the half-fleet one on average
+    i_hi, i_sp = bres.index("high"), bres.index("split")
+    assert r.total_cost[i_hi].mean() > r.total_cost[i_sp].mean()
+    # seeds see different prices → different costs, but the same data
+    # stream → comparable loss scale
+    assert not np.allclose(r.total_cost[:, 0], r.total_cost[:, 1])
+    # final model is per-replica: leading (S, R) axes
+    leaf = jax.tree.leaves(r.final_model)[0]
+    assert leaf.shape[:2] == (2, 2)
+
+
+def test_idle_ticks_are_true_noop(job):
+    """Regression for the weighted-mean denominator bug: ticks where every
+    worker is preempted must not touch the model. Interleaving unaffordable
+    prices into the trace changes time/idle but must leave the loss
+    trajectory and the final params bit-for-bit identical."""
+    rt = RuntimeModel(kind="det", r_const=1.0)
+    plan = _fixed([0.6] * N_W)
+    base = np.full(J, 0.5, np.float32)            # always affordable
+    spiky = np.ones(2 * J, np.float32) * 2.0      # bid 0.6 < 2.0 → idle
+    spiky[1::2] = base                            # every other tick runs
+
+    def run(trace, n_ticks):
+        sc = engine.Scenario(
+            price=engine.PriceSpec.from_trace(trace), alpha=0.0,
+            bid_schedule=np.tile(plan.plan_.bids, (J, 1)),
+            rt_kind="det", rt_const=1.0, idle_step=0.25)
+        return train_batched(job, [sc], seeds=[0], n_ticks=n_ticks)
+
+    clean, noisy = run(base, J), run(spiky, 2 * J)
+    assert clean.iterations[0, 0] == noisy.iterations[0, 0] == J
+    assert noisy.total_idle[0, 0] > 0 and clean.total_idle[0, 0] == 0
+    np.testing.assert_array_equal(clean.losses[0, 0, :J],
+                                  noisy.losses[0, 0, :J])
+    for a, b in zip(jax.tree.leaves(clean.final_model),
+                    jax.tree.leaves(noisy.final_model)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_price_spec_from_market_roundtrip():
+    dist = UniformPrice(0.3, 0.9)
+    spec = price_spec_from_market(SpotMarket(IIDPrices(dist)))
+    assert (spec.kind, spec.lo, spec.hi) == (engine.PRICE_UNIFORM, 0.3, 0.9)
+    trace = np.linspace(0.2, 0.8, 7).astype(np.float32)
+    spec = price_spec_from_market(SpotMarket(TickPrices(trace)))
+    assert spec.kind == engine.PRICE_TRACE
+    np.testing.assert_array_equal(spec.trace, trace)
+
+
+def test_run_batched_preemptible_pads_fleet(job):
+    """§V mode through the batched trainer: a strategy provisioning fewer
+    workers than the job fleet pads its mask to job.n_workers (as the
+    legacy loop does) instead of failing the fleet-width check."""
+    rt = RuntimeModel(kind="det", r_const=1.0)
+    plan = strat.DynamicWorkers(n0=3, eta=1.0, J=J, name="static3")
+    trainer = ElasticTrainer(
+        job=job, strategy=plan, mode="preemptible",
+        cluster=VolatileCluster(n_workers=N_W, runtime=rt, preempt_q=0.3,
+                                on_demand_price=0.5, idle_step=0.25))
+    bres = trainer.run_batched(seeds=[0, 1], iterations=J, n_ticks=60)
+    r = bres.result
+    assert (r.iterations == J).all()
+    ys = r.ys[0, :, :J]
+    assert np.nanmax(ys) <= 3          # never more than provisioned
+    assert np.isfinite(r.losses[0, :, :J]).all()
+
+
+def test_train_batched_rejects_fleet_mismatch(job):
+    sc = engine.Scenario(price=engine.PriceSpec.uniform(0.2, 1.0),
+                         alpha=0.0, bid_schedule=np.tile([0.9, 0.9], (J, 1)))
+    with pytest.raises(ValueError, match="fleet width"):
+        train_batched(job, [sc], seeds=[0], n_ticks=4)
