@@ -192,8 +192,11 @@ def bench_fig3():
 
 def bench_fig4():
     """Strategies under the non-i.i.d. synthetic historical trace: planning
-    sees the empirical F̂, the market replays the raw trace (one entry per
-    tick, per-seed tick offsets standing in for np.roll)."""
+    sees the empirical F̂, the market replays the raw trace *time-indexed*
+    (the wall clock selects the 5-minute-resolution entry, exactly as the
+    legacy `TracePrices` loop does — correct under the stochastic `exp`
+    iteration durations used here; per-seed index offsets stand in for
+    np.roll)."""
     from repro.sim import engine
     from repro.sim.evaluate import evaluate_batch
     from repro.sim.spot_market import TracePrices, synthetic_history
@@ -202,7 +205,7 @@ def bench_fig4():
     dist = TracePrices(trace, step=0.05).empirical_dist()
     quad, w0, prob, rt, strategies, eps_emp, n = _calibration(dist)
     tag = "fig4_trace"
-    spec = engine.PriceSpec.from_trace(trace)
+    spec = engine.PriceSpec.from_trace(trace, step=0.05)
     scenarios = [engine.scenario_from_strategy(
         s, alpha=prob.alpha, rt=rt, n_max=n, price_spec=spec,
         name=f"{name}@{tag}") for name, s in strategies.items()]
@@ -422,6 +425,17 @@ def bench_trainer():
          f"grid={len(strategies)}x{n_seeds};J={J};n_ticks={n_ticks};"
          f"completed={float(bres.completed.mean()):.2f};"
          f"final_loss={_nanmean(final_losses):.3f}")
+
+    # scan-native checkpointing overhead: same grid, full-carry snapshots
+    # every quarter of the tick budget (the preemption-safe configuration)
+    snap_k = max(n_ticks // 4, 1)
+    bres_snap, us_snap = _timed(lambda: train_batched(
+        job, scenarios, seeds=n_seeds, n_ticks=n_ticks,
+        snapshot_every=snap_k))
+    emit("trainer_batched_snapshots", us_snap / cells,
+         f"snapshot_every={snap_k};"
+         f"n_snapshots={len(bres_snap.snapshot_ticks)};"
+         f"overhead_vs_plain_pct={(us_snap / us_batched - 1) * 100:.1f}")
 
     def legacy_cell(strategy, seed, step_override=None):
         cluster = VolatileCluster(

@@ -45,5 +45,42 @@ PY
 if [ "$SMOKE_BENCH" = 1 ]; then
   echo "== benchmark smoke (--smoke: 2-tick budgets) =="
   python -m benchmarks.run --smoke
+
+  echo "== checkpoint smoke (save one snapshot + resume, bit-exact) =="
+  python - <<'PY'
+import numpy as np, tempfile, os
+from repro.data.synthetic import QuadraticProblem
+from repro.sim import engine
+from repro.train import checkpoint as ck
+
+quad = QuadraticProblem(dim=6, n_samples=64, cond=5.0, noise=0.2, seed=0)
+sc = engine.stack_scenarios([engine.Scenario(
+    price=engine.PriceSpec.uniform(0.2, 1.0), alpha=0.4 / quad.L,
+    bid_schedule=np.tile([0.7, 0.7], (10, 1)), rt_kind="exp", rt_lam=2.0,
+    idle_step=0.5)])
+program = engine.quadratic_program("full", 4)
+data = engine.jax_quadratic(quad)
+w0 = np.asarray(quad.w_star + 1.0, np.float32)
+cfg = engine.SimConfig(n_ticks=24, grad="full", snapshot_every=8)
+full = engine.simulate_program(sc, program, w0, data, [0, 1], cfg)
+state, tick = engine.snapshot_state(full, 0)
+path = os.path.join(tempfile.mkdtemp(prefix="ci_ckpt_"), "smoke.npz")
+ck.save(path, state, tick)
+restored, tick = ck.restore(path, engine.initial_state(sc, w0, 2))
+res = engine.simulate_program(
+    sc, program, None, data, [0, 1],
+    engine.SimConfig(n_ticks=24, grad="full"),
+    init_state=restored, tick0=tick)
+assert np.array_equal(res.costs, full.costs, equal_nan=True)
+assert np.array_equal(res.errors, full.errors, equal_nan=True)
+assert np.array_equal(res.total_time, full.total_time)
+print(f"checkpoint smoke OK: saved tick {tick}, resumed 16 ticks, "
+      "bit-exact")
+PY
+
+  echo "== fig4 trace-parity + kill-and-resume tests =="
+  python -m pytest -q \
+    "tests/test_engine_parity.py::test_fig4_trace_replay_matches_legacy_under_exp_runtimes" \
+    "tests/test_trainer_batched.py::test_kill_and_resume_batched_is_bitexact"
 fi
 echo "CI OK"

@@ -87,7 +87,10 @@ class Strategy:
         """The strategy resolved to a precomputed engine plan table. Base
         strategies are time-invariant: one bucket, never replanned.
         Time-adaptive strategies (``DynamicBids``) override this with one
-        schedule per coarse elapsed-time bucket."""
+        schedule per coarse elapsed-time bucket; the engine latches the
+        bucket from the scan carry's *wall clock* (the same clock that
+        time-indexes trace replay), so the latch is exact under stochastic
+        iteration durations."""
         J = J or self.total_iterations
         return PlanTable(bids=self.bid_schedule(J, n_max=n_max)[None],
                          starts=np.zeros(1), replan_at=J + 1)
@@ -182,16 +185,22 @@ class DynamicBids(Strategy):
         return self._replan(self.theta - t_expected,
                             self._plan1.J - self.switch_at)
 
-    def bid_schedule(self, J=None, n_max=None):
-        J = J or self.total_iterations
-        plan2 = self._stage2_plan_expected()
-        # both stages pad to the widest fleet, whatever n_max was requested
-        n_max = max(n_max or 0, self._plan1.n, plan2.n)
+    def _rows(self, plan2, J: int, n_max: int) -> np.ndarray:
+        """(J, n_max) schedule: stage-1 bids until ``switch_at``, then the
+        given stage-2 plan — the single row-assembly shared by
+        ``bid_schedule`` and every ``plan_table`` bucket."""
         rows1 = np.tile(_pad_bids(self._plan1.bids, n_max),
                         (min(self.switch_at, J), 1))
         rows2 = np.tile(_pad_bids(plan2.bids, n_max),
                         (max(J - self.switch_at, 0), 1))
         return np.concatenate([rows1, rows2])[:J]
+
+    def bid_schedule(self, J=None, n_max=None):
+        J = J or self.total_iterations
+        plan2 = self._stage2_plan_expected()
+        # both stages pad to the widest fleet, whatever n_max was requested
+        n_max = max(n_max or 0, self._plan1.n, plan2.n)
+        return self._rows(plan2, J, n_max)
 
     def plan_table(self, J=None, n_max=None, n_buckets: int = 8):
         """One stage-2 replan per coarse elapsed-time bucket over [0, θ]:
@@ -206,14 +215,7 @@ class DynamicBids(Strategy):
         plans2 = [self._replan(self.theta - t, J - self.switch_at)
                   for t in starts]
         n_max = max([n_max or 0, self._plan1.n] + [p.n for p in plans2])
-        rows1 = np.tile(_pad_bids(self._plan1.bids, n_max),
-                        (min(self.switch_at, J), 1))
-        table = np.stack([
-            np.concatenate([
-                rows1,
-                np.tile(_pad_bids(p.bids, n_max),
-                        (max(J - self.switch_at, 0), 1))])[:J]
-            for p in plans2])
+        table = np.stack([self._rows(p, J, n_max) for p in plans2])
         return PlanTable(bids=table, starts=starts,
                          replan_at=min(self.switch_at, J))
 

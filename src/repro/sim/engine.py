@@ -17,14 +17,26 @@ the Theorem-1 quadratic oracle, but any pure step over an arbitrary
 masked train step) this way, so a strategy × market grid trains end-to-end
 inside one compiled call with no host sync between ticks.
 
-Time model (§III-C), identical to the legacy loop: each *tick* draws one
-price; if ≥1 worker is active an SGD iteration runs and the clock advances
-by the sampled runtime R(y), else the clock advances by ``idle_step`` (idle
-time, no iteration). A scenario stops accumulating once it has completed its
-``J`` iterations. Active workers pay the *price*, not the bid (§IV).
-Iterations with zero active workers are a *true no-op*: the whole model
-pytree is gated on ``running`` with ``jnp.where``, so idle/finished ticks
-cannot leak scaled gradients into the iterate.
+Time model (§III-C), identical to the legacy loop: each *tick* queries the
+price prevailing at the current wall clock; if ≥1 worker is active an SGD
+iteration runs and the clock advances by the sampled runtime R(y), else the
+clock advances by ``idle_step`` (idle time, no iteration). Replayed traces
+(``PriceSpec.from_trace``) are *time-indexed*: the carry's wall clock ``t``
+— not the tick counter — selects the trace entry, so replay stays exact
+under stochastic (``exp``) iteration durations where ticks and elapsed time
+diverge (the fig4 regime; ``from_trace_ticks`` keeps the legacy per-tick
+consumption for tick-exact parity pins). A scenario stops accumulating once
+it has completed its ``J`` iterations. Active workers pay the *price*, not
+the bid (§IV). Iterations with zero active workers are a *true no-op*: the
+whole model pytree is gated on ``running`` with ``jnp.where``, so
+idle/finished ticks cannot leak scaled gradients into the iterate.
+
+Checkpointing is scan-native: ``SimConfig.snapshot_every = k`` restructures
+the scan into k-tick chunks whose per-chunk output is the *entire* carry
+(`SimState`, model included), stacked into ``EngineResult.snapshots``;
+``simulate_program(init_state=..., tick0=...)`` resumes from any snapshot
+bit-exactly (per-tick RNG keys fold the absolute tick index), so a
+preempted batched run restarts mid-trace with no drift.
 
 Adaptive (time-dependent) strategies enter the scan as precomputed *plan
 tables*: ``bid_table[b, j]`` holds the bids for iteration ``j`` under
@@ -64,6 +76,7 @@ from repro.sim.market_core import (BID_EPS, iteration_cost,  # noqa: F401
 # Modes / price kinds (ints so they vmap as data).
 SPOT, PREEMPTIBLE = 0, 1
 PRICE_UNIFORM, PRICE_TRUNC_GAUSS, PRICE_TRACE, PRICE_EMPIRICAL = 0, 1, 2, 3
+PRICE_TRACE_TICK = 4
 
 
 # --------------------------------------------------------------------------
@@ -78,8 +91,18 @@ class PriceSpec:
     kind=PRICE_UNIFORM:      U[lo, hi].
     kind=PRICE_TRUNC_GAUSS:  N(mu, sigma²) truncated to [lo, hi] (exact
                              inverse-CDF via ndtri — no bisection).
-    kind=PRICE_TRACE:        replay ``trace`` one entry per tick (wrapping);
-                             per-seed variation comes from a tick offset.
+    kind=PRICE_TRACE:        *time-indexed* trace replay: the price at wall
+                             clock ``t`` is the trace entry whose timestamp
+                             is the last one ≤ ``t mod period`` — exactly
+                             ``TracePrices.price(t)`` for uniform ``step``
+                             timestamps, and correct under stochastic
+                             iteration durations (the fig4 regime). Per-seed
+                             variation comes from a deterministic index
+                             offset (seed 0 replays verbatim).
+    kind=PRICE_TRACE_TICK:   legacy *tick-indexed* replay: one entry per
+                             engine tick regardless of the clock — matches
+                             ``TickPrices`` (call-counting) for tick-exact
+                             parity tests.
     kind=PRICE_EMPIRICAL:    i.i.d. draws from the empirical quantile of
                              ``trace`` (must be sorted) — matches
                              ``IIDPrices(EmpiricalPrice(samples))``.
@@ -91,6 +114,8 @@ class PriceSpec:
     mu: float = 0.0
     sigma: float = 1.0
     trace: Optional[np.ndarray] = None
+    times: Optional[np.ndarray] = None     # (L,) ascending, times[0] == 0
+    period: Optional[float] = None         # wrap length, > times[-1]
 
     @classmethod
     def uniform(cls, lo: float, hi: float) -> "PriceSpec":
@@ -102,9 +127,46 @@ class PriceSpec:
         return cls(kind=PRICE_TRUNC_GAUSS, lo=lo, hi=hi, mu=mu, sigma=sigma)
 
     @classmethod
-    def from_trace(cls, trace: np.ndarray) -> "PriceSpec":
+    def from_trace(cls, trace: np.ndarray, times: Optional[np.ndarray] = None,
+                   step: float = 1.0,
+                   period: Optional[float] = None) -> "PriceSpec":
+        """Time-indexed trace replay (the faithful ``TracePrices`` analogue).
+
+        ``times`` are explicit per-entry timestamps (ascending from 0); when
+        omitted they default to ``step * arange(len(trace))`` — the uniform
+        resolution of ``TracePrices(trace, step=step)``. ``period`` is the
+        wrap length (default: one step past the last timestamp, i.e.
+        ``len(trace) * step`` for uniform traces, matching the legacy
+        ``int(t/step) % len`` modulo)."""
         trace = np.asarray(trace, np.float32)
+        if times is None:
+            times = np.float32(step) * np.arange(len(trace), dtype=np.float32)
+            if period is None:
+                period = float(step) * len(trace)
+        times = np.asarray(times, np.float32)
+        if times.shape != trace.shape:
+            raise ValueError(f"{len(times)} timestamps for {len(trace)} "
+                             "trace entries")
+        if times[0] != 0.0 or np.any(np.diff(times) <= 0):
+            raise ValueError("trace timestamps must ascend strictly from 0, "
+                             f"got {times}")
+        if period is None:
+            last_gap = times[-1] - times[-2] if len(times) > 1 else 1.0
+            period = float(times[-1] + last_gap)
+        if period <= float(times[-1]):
+            raise ValueError(f"period {period} must exceed the last "
+                             f"timestamp {times[-1]}")
         return cls(kind=PRICE_TRACE, lo=float(trace.min()),
+                   hi=float(trace.max()), trace=trace, times=times,
+                   period=float(period))
+
+    @classmethod
+    def from_trace_ticks(cls, trace: np.ndarray) -> "PriceSpec":
+        """Legacy tick-indexed replay: one entry per engine tick (wrapping),
+        regardless of the wall clock — the ``TickPrices`` consumption order,
+        kept for tick-exact parity pins."""
+        trace = np.asarray(trace, np.float32)
+        return cls(kind=PRICE_TRACE_TICK, lo=float(trace.min()),
                    hi=float(trace.max()), trace=trace)
 
     @classmethod
@@ -240,6 +302,8 @@ class ScenarioBatch(NamedTuple):
     price_sigma: jnp.ndarray
     trace: jnp.ndarray             # (S, L_tr) f32 (zeros when unused)
     trace_len: jnp.ndarray         # (S,) i32
+    trace_times: jnp.ndarray       # (S, L_tr) f32 timestamps, +inf-padded
+    trace_period: jnp.ndarray      # (S,) f32 wrap length (1 when unused)
     preempt_q: jnp.ndarray         # (S,) f32
     on_demand_price: jnp.ndarray
     rt_kind: jnp.ndarray           # (S,) i32: 0 exp, 1 det
@@ -290,6 +354,12 @@ def stack_scenarios(scenarios: Sequence[Scenario]) -> ScenarioBatch:
     wrk = np.zeros((S, j_max), np.int32)
     trc = np.zeros((S, l_tr), np.float32)
     tln = np.ones(S, np.int32)
+    # timestamps: +inf past a scenario's own trace so a right-bisect of any
+    # finite clock value lands inside the real entries; row 0 stays 0 so the
+    # lookup index is never negative
+    tms = np.full((S, l_tr), np.inf, np.float32)
+    tms[:, 0] = 0.0
+    period = np.ones(S, np.float32)
     cols: Dict[str, np.ndarray] = {
         k: np.zeros(S, np.float32) for k in
         ["price_lo", "price_hi", "price_mu", "price_sigma", "preempt_q",
@@ -322,6 +392,17 @@ def stack_scenarios(scenarios: Sequence[Scenario]) -> ScenarioBatch:
             reps = int(np.ceil(l_tr / len(tr)))
             trc[i] = np.tile(tr, reps)[:l_tr]
             tln[i] = len(tr)
+        if s.price.kind == PRICE_TRACE:
+            if s.price.times is None or s.price.period is None:
+                # without timestamps the lookup would silently pin to
+                # entry 0 — a hand-built spec must go through from_trace
+                raise ValueError(
+                    f"scenario {i} ({s.name!r}): a PRICE_TRACE spec needs "
+                    "timestamps and a period — build it with "
+                    "PriceSpec.from_trace (or use from_trace_ticks for "
+                    "tick-indexed replay)")
+            tms[i, :len(s.price.times)] = s.price.times
+            period[i] = s.price.period
         for k, v in [("price_lo", s.price.lo), ("price_hi", s.price.hi),
                      ("price_mu", s.price.mu),
                      ("price_sigma", s.price.sigma),
@@ -336,6 +417,7 @@ def stack_scenarios(scenarios: Sequence[Scenario]) -> ScenarioBatch:
         replan_at=jnp.asarray(replan), worker_schedule=jnp.asarray(wrk),
         mode=jnp.asarray(mode), price_kind=jnp.asarray(pk),
         trace=jnp.asarray(trc), trace_len=jnp.asarray(tln),
+        trace_times=jnp.asarray(tms), trace_period=jnp.asarray(period),
         rt_kind=jnp.asarray(rtk), J=jnp.asarray(J),
         **{k: jnp.asarray(v) for k, v in cols.items()})
 
@@ -394,6 +476,8 @@ class SimConfig:
     n_ticks: int                 # market ticks to scan (≥ J + idle budget)
     batch: int = 16              # per-worker minibatch size (quad program)
     grad: str = "minibatch"      # "minibatch" | "full" (deterministic)
+    snapshot_every: int = 0      # emit the full scan carry every k ticks
+    #                              (0 = off) — preemption-safe checkpoints
 
 
 @dataclasses.dataclass(frozen=True, eq=False)
@@ -458,6 +542,82 @@ class SimState(NamedTuple):
     y_traj: jnp.ndarray          # (J_max,) active workers
 
 
+#: Engine-owned SimState fields and their mandatory dtypes. The model
+#: subtree is program-defined; it only has to be weak-type-free.
+_CARRY_DTYPES = {
+    "t": jnp.float32, "j": jnp.int32, "bucket": jnp.int32,
+    "total_cost": jnp.float32, "total_idle": jnp.float32,
+    "err_traj": jnp.float32, "cost_traj": jnp.float32,
+    "time_traj": jnp.float32, "y_traj": jnp.float32,
+}
+
+
+def canonicalize_model(model):
+    """Strip weak types from a model pytree (Python scalars arrive as
+    weakly-typed f32/i32, and a weak leaf in the scan carry promotes —
+    i.e. recompiles — on the first tick). Leaf dtypes are preserved."""
+
+    def strengthen(x):
+        x = jnp.asarray(x)
+        if getattr(x, "weak_type", False):
+            x = lax.convert_element_type(x, x.dtype)
+        return x
+
+    return jax.tree.map(strengthen, model)
+
+
+def assert_carry_dtypes(state: SimState) -> None:
+    """Fail fast (at trace time) if the scan carry could promote: engine
+    fields must be exactly their declared f32/i32 dtypes and no leaf —
+    engine or model — may be weakly typed."""
+    for name, want in _CARRY_DTYPES.items():
+        leaf = getattr(state, name)
+        if leaf.dtype != want or getattr(leaf, "weak_type", False):
+            raise TypeError(
+                f"SimState.{name} must be strong {jnp.dtype(want).name}, "
+                f"got {leaf.dtype}"
+                f"{' (weak)' if getattr(leaf, 'weak_type', False) else ''}")
+    for path, leaf in jax.tree_util.tree_flatten_with_path(state.model)[0]:
+        if getattr(leaf, "weak_type", False):
+            raise TypeError(
+                f"model leaf {jax.tree_util.keystr(path)} is weakly typed "
+                f"({leaf.dtype}); pass it through canonicalize_model first")
+
+
+def initial_state(scenarios: "ScenarioBatch | Sequence[Scenario]", model0,
+                  n_seeds: int) -> SimState:
+    """The batched (S, R) initial scan carry: every (scenario, seed) replica
+    starts from ``model0`` at t=0 with empty trajectories.
+
+    This is both what ``simulate_program`` starts from and the *restore
+    template* for checkpointed runs (`train.checkpoint.restore` fills the
+    values back in from disk).
+
+    The model fan-out is materialized eagerly (``broadcast_to`` on device)
+    so the buffers exactly match the scan carry — a donated call reuses
+    them in place. For a non-donated call this is a transient extra
+    (S, R)-replica copy at startup; at the reduced-model scales this repo
+    runs that is cheap, and huge grids should donate anyway."""
+    if not isinstance(scenarios, ScenarioBatch):
+        scenarios = stack_scenarios(scenarios)
+    grid = (scenarios.n_scenarios, int(n_seeds))
+    j_max = scenarios.j_max
+    model = jax.tree.map(
+        lambda x: jnp.broadcast_to(jnp.asarray(x), grid + jnp.shape(x)),
+        canonicalize_model(model0))
+
+    def nan_traj():
+        return jnp.full(grid + (j_max,), jnp.nan, jnp.float32)
+
+    return SimState(
+        t=jnp.zeros(grid, jnp.float32), j=jnp.zeros(grid, jnp.int32),
+        bucket=jnp.full(grid, -1, jnp.int32),
+        total_cost=jnp.zeros(grid, jnp.float32),
+        total_idle=jnp.zeros(grid, jnp.float32), model=model,
+        err_traj=nan_traj(), cost_traj=nan_traj(),
+        time_traj=nan_traj(), y_traj=nan_traj())
+
+
 @dataclasses.dataclass
 class EngineResult:
     """Stacked trajectories, shape (S, R, J_max); invalid entries are NaN
@@ -473,6 +633,13 @@ class EngineResult:
     total_idle: np.ndarray       # (S, R)
     J: np.ndarray                # (S,) per-scenario targets
     final_model: Any = None      # device pytree, leaves stacked (S, R, ...)
+    snapshots: Any = None        # SimState pytree, leaves (S, R, n_snap, …)
+    #                              — the full carry every cfg.snapshot_every
+    #                              ticks (None when snapshots are off)
+    snapshot_ticks: Optional[np.ndarray] = None  # (n_snap,) tick counts:
+    #                              snapshot i is the carry after tick
+    #                              snapshot_ticks[i] (resume passes this as
+    #                              tick0)
 
     @property
     def losses(self) -> np.ndarray:
@@ -504,8 +671,9 @@ class EngineResult:
             }
 
 
-def _draw_price(sc: ScenarioBatch, key, k, seed) -> jnp.ndarray:
-    """One price per tick; all three kinds computed, the scenario's picked."""
+def _draw_price(sc: ScenarioBatch, key, k, seed, t) -> jnp.ndarray:
+    """The price prevailing at tick ``k`` / wall clock ``t``; every kind is
+    computed and the scenario's is picked (all branches are cheap)."""
     u = jax.random.uniform(key)
     p_unif = sc.price_lo + u * (sc.price_hi - sc.price_lo)
     lo_z = ndtr((sc.price_lo - sc.price_mu) / sc.price_sigma)
@@ -513,30 +681,52 @@ def _draw_price(sc: ScenarioBatch, key, k, seed) -> jnp.ndarray:
     p_gauss = jnp.clip(
         sc.price_mu + sc.price_sigma * ndtri(lo_z + u * (hi_z - lo_z)),
         sc.price_lo, sc.price_hi)
-    # per-seed trace variation = deterministic tick offset (≈ np.roll)
-    p_trace = sc.trace[(k + seed * 1013) % sc.trace_len]
+    # per-seed trace variation = deterministic index offset (≈ np.roll);
+    # seed 0 replays the trace verbatim (the parity-pinned configuration)
+    roll = seed * 1013
+    # time-indexed replay (§V/fig4 fidelity): the entry whose timestamp is
+    # the last one ≤ the wrapped wall clock — exact under stochastic
+    # iteration durations, where tick count and elapsed time diverge
+    t_eff = jnp.mod(t, sc.trace_period)
+    idx_t = jnp.clip(
+        jnp.searchsorted(sc.trace_times, t_eff, side="right") - 1,
+        0, sc.trace_len - 1)
+    p_time = sc.trace[(idx_t + roll) % sc.trace_len]
+    # legacy tick-indexed replay (TickPrices consumption order)
+    p_tick = sc.trace[(k + roll) % sc.trace_len]
     # empirical quantile: samples[int(u·len)] on the sorted trace
     p_emp = sc.trace[jnp.minimum((u * sc.trace_len).astype(jnp.int32),
                                  sc.trace_len - 1)]
     return jnp.where(
         sc.price_kind == PRICE_EMPIRICAL, p_emp,
-        jnp.where(sc.price_kind == PRICE_TRACE, p_trace,
-                  jnp.where(sc.price_kind == PRICE_TRUNC_GAUSS, p_gauss,
-                            p_unif)))
+        jnp.where(sc.price_kind == PRICE_TRACE, p_time,
+                  jnp.where(sc.price_kind == PRICE_TRACE_TICK, p_tick,
+                            jnp.where(sc.price_kind == PRICE_TRUNC_GAUSS,
+                                      p_gauss, p_unif))))
 
 
-def _sim_one(sc: ScenarioBatch, model0, data, seed, program: ModelProgram,
-             cfg: SimConfig):
-    """Simulate one scenario × one seed (vmapped twice by `simulate`).
-    ``sc`` holds per-scenario scalars/rows (leading S axis stripped)."""
+def _sim_one(sc: ScenarioBatch, state0: SimState, data, seed,
+             program: ModelProgram, n_run: int, k_snap: int, tick0):
+    """Simulate one scenario × one seed (vmapped twice by `simulate`),
+    running ``n_run`` ticks from carry ``state0`` at absolute tick ``tick0``
+    (0 for a fresh run; a restored checkpoint resumes mid-trace — per-tick
+    RNG keys are folded from the absolute tick index, so the continuation
+    is bit-exact). ``tick0`` is *traced* (data, not a static shape), so
+    host-chunked drivers replaying uniform ``n_run`` windows share one
+    compiled program. ``sc`` holds per-scenario scalars/rows (leading S
+    axis stripped). Returns ``(final_state, snapshots)``: with
+    ``k_snap > 0`` the scan runs in k-tick chunks and stacks the full carry
+    after each chunk (the checkpoint stream); otherwise snapshots is
+    None."""
     j_max = sc.bid_table.shape[1]
     n_max = sc.bid_table.shape[2]
     base = jax.random.fold_in(jax.random.PRNGKey(20), seed)
+    assert_carry_dtypes(state0)
 
     def tick(state: SimState, k):
         kk = jax.random.fold_in(base, k)
         k_price, k_dur, k_grad, k_up = jax.random.split(kk, 4)
-        price = _draw_price(sc, k_price, k, seed)
+        price = _draw_price(sc, k_price, k, seed, state.t)
 
         # plan-table bucket: latched from the wall clock at the first tick
         # of iteration `replan_at` (cf. DynamicBids consulting the clock
@@ -595,71 +785,116 @@ def _sim_one(sc: ScenarioBatch, model0, data, seed, program: ModelProgram,
             y_traj=put(state.y_traj, y))
         return new, None
 
-    nan_traj = jnp.full(j_max, jnp.nan, jnp.float32)
-    init = SimState(t=jnp.float32(0.0), j=jnp.int32(0),
-                    bucket=jnp.int32(-1),
-                    total_cost=jnp.float32(0.0), total_idle=jnp.float32(0.0),
-                    model=model0,
-                    err_traj=nan_traj, cost_traj=nan_traj,
-                    time_traj=nan_traj, y_traj=nan_traj)
-    final, _ = lax.scan(tick, init, jnp.arange(cfg.n_ticks))
-    return final
+    def run(state, ks):
+        state, _ = lax.scan(tick, state, ks)
+        return state
+
+    ticks = tick0 + jnp.arange(n_run, dtype=jnp.int32)
+    if k_snap and n_run >= k_snap:
+        # chunked scan: the outer scan's per-step output is the whole carry
+        # after each k_snap-tick chunk — every-k snapshots with no
+        # per-tick memory cost; the remainder ticks run unsnapshotted
+        n_chunks = n_run // k_snap
+        head = ticks[:n_chunks * k_snap].reshape(n_chunks, k_snap)
+
+        def chunk(state, ks):
+            state = run(state, ks)
+            return state, state
+
+        final, snaps = lax.scan(chunk, state0, head)
+        if n_run % k_snap:
+            final = run(final, ticks[n_chunks * k_snap:])
+        return final, snaps
+    return run(state0, ticks), None
 
 
-def _vmapped_sim(batch: ScenarioBatch, model0, data, seeds,
-                 program: ModelProgram, cfg: SimConfig, model_axis):
-    one = functools.partial(_sim_one, program=program, cfg=cfg)
-    over_seeds = jax.vmap(one, in_axes=(None, model_axis, None, 0))
-    over_scenarios = jax.vmap(over_seeds, in_axes=(0, model_axis, None,
-                                                   None))
-    return over_scenarios(batch, model0, data, seeds)
+def _vmapped_sim(batch: ScenarioBatch, state0, data, seeds, tick0,
+                 program: ModelProgram, n_run: int, k_snap: int):
+    def one(sc, st, seed, t0):
+        return _sim_one(sc, st, data, seed, program, n_run, k_snap, t0)
+
+    over_seeds = jax.vmap(one, in_axes=(None, 0, 0, None))
+    over_scenarios = jax.vmap(over_seeds, in_axes=(0, 0, None, None))
+    return over_scenarios(batch, state0, seeds, tick0)
 
 
-@functools.partial(jax.jit, static_argnames=("program", "cfg"))
-def _simulate_jit(batch, model0, data, seeds, program, cfg):
-    return _vmapped_sim(batch, model0, data, seeds, program, cfg,
-                        model_axis=None)
+@functools.partial(jax.jit,
+                   static_argnames=("program", "n_run", "k_snap"))
+def _simulate_jit(batch, state0, data, seeds, tick0, program, n_run,
+                  k_snap):
+    return _vmapped_sim(batch, state0, data, seeds, tick0, program, n_run,
+                        k_snap)
 
 
-@functools.partial(jax.jit, static_argnames=("program", "cfg"),
-                   donate_argnames=("model0",))
-def _simulate_jit_donated(batch, model0, data, seeds, program, cfg):
-    # model0 arrives pre-broadcast to (S, R, ...) so the donated buffers
-    # exactly match the scan carry / final-model outputs and XLA can reuse
-    # them in place (a broadcast shape would make donation a silent no-op)
-    return _vmapped_sim(batch, model0, data, seeds, program, cfg,
-                        model_axis=0)
+@functools.partial(jax.jit,
+                   static_argnames=("program", "n_run", "k_snap"),
+                   donate_argnames=("state0",))
+def _simulate_jit_donated(batch, state0, data, seeds, tick0, program,
+                          n_run, k_snap):
+    # state0 leaves are materialized at the (S, R, ...) carry shapes
+    # (`initial_state` broadcasts eagerly), so the donated buffers exactly
+    # match the scan carry / final outputs and XLA reuses them in place
+    return _vmapped_sim(batch, state0, data, seeds, tick0, program, n_run,
+                        k_snap)
 
 
 def simulate_program(scenarios, program: ModelProgram, model0, data, seeds,
-                     cfg: SimConfig, donate: bool = False) -> EngineResult:
+                     cfg: SimConfig, donate: bool = False,
+                     init_state: Optional[SimState] = None,
+                     tick0: int = 0) -> EngineResult:
     """Run S scenarios × R seeds of an arbitrary ModelProgram in one
     compiled call.
 
     model0: initial model pytree, shared by every (scenario, seed) replica
-    (the scan carry fans it out); data: device pytree visible to every step
-    (problem constants / stacked batches); seeds: int count or explicit
-    sequence. With ``donate=True`` the model0 buffers are donated to the
-    call (pass a fresh copy if you need them afterwards).
+    (``initial_state`` fans it out; ignored when ``init_state`` is given);
+    data: device pytree visible to every step (problem constants / stacked
+    batches); seeds: int count or explicit sequence. With ``donate=True``
+    the initial-carry buffers are donated to the call (pass a fresh copy if
+    you need them afterwards).
+
+    Checkpointing: ``cfg.snapshot_every = k`` stacks the full scan carry
+    every k ticks into ``EngineResult.snapshots`` (+ ``snapshot_ticks``);
+    ``init_state``/``tick0`` resume a run from such a snapshot (same
+    scenarios/seeds/cfg), continuing the per-tick RNG stream bit-exactly.
+
     Returns stacked (S, R, J_max) trajectories plus the per-replica final
     model (leaves shaped (S, R, ...), left on device).
+
+    Reproducibility note: per-tick stochastic draws (runtime exponentials,
+    preemption uniforms, minibatch indices) are shaped by the *batch-global*
+    padded worker width ``n_max``, so a (scenario, seed) cell reproduces
+    bit-exactly within the same stacked grid — checkpoint/resume included —
+    but not across grids whose padding differs (stack with a wider scenario
+    and the same seed consumes the key stream differently).
     """
     if not isinstance(scenarios, ScenarioBatch):
         scenarios = stack_scenarios(scenarios)
     if np.isscalar(seeds):
         seeds = np.arange(int(seeds))
     seeds = jnp.asarray(np.asarray(seeds, np.int32))
-    if donate:
-        grid = (scenarios.n_scenarios, len(seeds))
-        # broadcast_to is eager under JAX: this materializes the (S, R)
-        # replica grid once on device, and those buffers are donated
-        model0 = jax.tree.map(
-            lambda x: jnp.broadcast_to(jnp.asarray(x),
-                                       grid + jnp.shape(x)), model0)
-        final = _simulate_jit_donated(scenarios, model0, data, seeds,
-                                      program, cfg)
-    else:
-        final = _simulate_jit(scenarios, model0, data, seeds, program, cfg)
+    tick0 = int(tick0)
+    if not 0 <= tick0 <= cfg.n_ticks:
+        raise ValueError(f"tick0={tick0} outside [0, n_ticks={cfg.n_ticks}]")
+    n_run = cfg.n_ticks - tick0
+    if cfg.snapshot_every < 0:
+        raise ValueError(f"snapshot_every={cfg.snapshot_every} must be ≥ 0")
+    if cfg.snapshot_every and cfg.snapshot_every > n_run:
+        # silently returning snapshots=None here would defeat the caller's
+        # checkpointing intent — fail loudly instead
+        raise ValueError(
+            f"snapshot_every={cfg.snapshot_every} exceeds the remaining "
+            f"tick budget ({n_run} ticks from tick0={tick0}): no snapshot "
+            "would ever be emitted")
+    if init_state is None:
+        init_state = initial_state(scenarios, model0, len(seeds))
+    fn = _simulate_jit_donated if donate else _simulate_jit
+    final, snaps = fn(scenarios, init_state, data, seeds,
+                      jnp.asarray(tick0, jnp.int32), program, n_run,
+                      cfg.snapshot_every)
+    snap_ticks = None
+    if snaps is not None:
+        n_snap = n_run // cfg.snapshot_every
+        snap_ticks = tick0 + cfg.snapshot_every * np.arange(1, n_snap + 1)
     return EngineResult(
         errors=np.asarray(final.err_traj),
         costs=np.asarray(final.cost_traj),
@@ -670,7 +905,21 @@ def simulate_program(scenarios, program: ModelProgram, model0, data, seeds,
         total_cost=np.asarray(final.total_cost),
         total_idle=np.asarray(final.total_idle),
         J=np.asarray(scenarios.J),
-        final_model=final.model)
+        final_model=final.model,
+        snapshots=snaps,
+        snapshot_ticks=snap_ticks)
+
+
+def snapshot_state(result: EngineResult, index: int = -1):
+    """Select one snapshot from a snapshotting run as a batched ``SimState``
+    (leaves (S, R, ...)) plus its absolute tick count — the pair
+    `train.checkpoint.save` persists and ``simulate_program(init_state=...,
+    tick0=...)`` resumes from."""
+    if result.snapshots is None:
+        raise ValueError("run had no snapshots: set SimConfig.snapshot_every")
+    tick = int(result.snapshot_ticks[index])
+    state = jax.tree.map(lambda x: x[:, :, index], result.snapshots)
+    return state, tick
 
 
 def simulate(scenarios, quad, w0, seeds, cfg: SimConfig) -> EngineResult:
@@ -706,7 +955,7 @@ def scenario_from_strategy(strategy, *, alpha: float, rt,
 
     Spot strategies (``bids``) become a precomputed plan table against the
     price distribution ``dist`` (or an explicit ``price_spec``, e.g. a
-    tick-replayed trace) — time-adaptive strategies (``DynamicBids``)
+    time-indexed trace replay) — time-adaptive strategies (``DynamicBids``)
     resolve to one bid schedule per coarse elapsed-time bucket, latched by
     the engine at replan time; provisioning strategies (``workers``) become
     a worker schedule under exogenous preemption probability ``q``.

@@ -243,14 +243,17 @@ def evaluate_batch(strategies: Mapping[str, Strategy],
                    batch: int = 16, grad: str = "minibatch",
                    n_max: Optional[int] = None,
                    n_ticks: Optional[int] = None,
-                   idle_step: Optional[float] = None) -> BatchResult:
+                   idle_step: Optional[float] = None,
+                   snapshot_every: int = 0) -> BatchResult:
     """Run every strategy × market scenario × seed in one jitted call.
 
     ``scenarios`` is either a mapping market-name → PriceDist (spot mode;
     use ``q`` instead of dists for §V preemptible mode) or a pre-built list
     of `engine.Scenario` (then ``strategies`` only labels them). Returns
     stacked trajectories with mean ± 95%-CI summaries per scenario; labels
-    are "<strategy>@<market>".
+    are "<strategy>@<market>". ``snapshot_every = k`` additionally stacks
+    the full scan carry every k ticks into ``result.snapshots`` (see the
+    engine's scan-native checkpointing).
     """
     if isinstance(scenarios, Mapping):
         if rt is None:
@@ -271,7 +274,8 @@ def evaluate_batch(strategies: Mapping[str, Strategy],
     batch_spec = engine.stack_scenarios(built)
     if n_ticks is None:
         n_ticks = 4 * batch_spec.j_max + 64
-    cfg = engine.SimConfig(n_ticks=n_ticks, batch=batch, grad=grad)
+    cfg = engine.SimConfig(n_ticks=n_ticks, batch=batch, grad=grad,
+                           snapshot_every=snapshot_every)
     res = engine.simulate(batch_spec, quad, w0, n_seeds, cfg)
     return BatchResult(names=names, result=res)
 

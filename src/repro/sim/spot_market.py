@@ -62,7 +62,11 @@ def synthetic_history(hours: float = 24 * 30, step_minutes: float = 5.0,
 
 @dataclasses.dataclass
 class TracePrices(PriceProcess):
-    """Replay of a (synthetic or downloaded) historical trace."""
+    """Replay of a (synthetic or downloaded) historical trace, indexed by
+    *wall-clock time* at resolution ``step`` (wrapping). The batched-engine
+    counterpart is ``PriceSpec.from_trace(trace, step=step)``, which
+    replays identically — including under stochastic iteration durations
+    (tests/test_engine_parity.py pins the fig4 exp-runtime parity)."""
 
     trace: np.ndarray
     step: float = 1.0              # trace resolution in time units
@@ -80,10 +84,11 @@ class TracePrices(PriceProcess):
 @dataclasses.dataclass
 class TickPrices(PriceProcess):
     """Call-counting replay: the k-th price *query* returns trace[k % len],
-    regardless of the query time. This is the consumption order of the
-    batched engine (one draw per tick), so feeding the same trace to a
-    TickPrices market and to a PRICE_TRACE scenario yields tick-exact parity
-    between the legacy loop and `repro.sim.engine.simulate`."""
+    regardless of the query time. This matches the engine's legacy
+    tick-indexed mode (``PriceSpec.from_trace_ticks`` / PRICE_TRACE_TICK —
+    one draw per tick), so feeding the same trace to a TickPrices market
+    and a from_trace_ticks scenario yields tick-exact parity between the
+    legacy loop and `repro.sim.engine.simulate`."""
 
     trace: np.ndarray
 

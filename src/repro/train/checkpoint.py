@@ -1,7 +1,12 @@
 """Preemption-safe checkpointing: flat .npz with path-keyed leaves, written
 atomically (tmp + rename) so a preemption mid-write never corrupts the last
 good checkpoint. The parameter server in the paper's deployment lives on an
-on-demand instance; here the checkpoint is the equivalent durable state."""
+on-demand instance; here the checkpoint is the equivalent durable state.
+
+Any pytree persists — a bare (params, opt_state) from the legacy loop or
+the engine's full batched ``SimState`` carry (`trainer.save_batched` /
+`restore_batched`), so a preempted scan-native grid run resumes mid-trace
+bit-exactly."""
 from __future__ import annotations
 
 import os
@@ -36,14 +41,40 @@ def save(path: str, state: Any, step: int) -> None:
 
 def restore(path: str, like: Any) -> Tuple[Any, int]:
     """Restore into the structure of `like` (values replaced by saved
-    arrays)."""
+    arrays, cast to each template leaf's dtype; Python-scalar leaves come
+    back as Python scalars of the same type).
+
+    Structure drift between the checkpoint and the template — keys present
+    in one but not the other — raises a ValueError naming the offending
+    keys instead of an opaque KeyError mid-unflatten."""
     with np.load(path) as data:
+        if "__step__" not in data:
+            raise ValueError(f"{path} is not a repro checkpoint "
+                             "(missing __step__)")
         step = int(data["__step__"])
         leaves_paths = jax.tree_util.tree_flatten_with_path(like)[0]
         treedef = jax.tree_util.tree_structure(like)
+        keys = [jax.tree_util.keystr(p) for p, _ in leaves_paths]
+        have = set(data.files) - {"__step__"}
+        missing = [k for k in keys if k not in have]
+        extra = sorted(have - set(keys))
+        if missing or extra:
+            raise ValueError(
+                f"checkpoint {path} does not match the restore template: "
+                f"{len(missing)} template leaves missing from the "
+                f"checkpoint {missing[:4]}{'...' if len(missing) > 4 else ''}"
+                f", {len(extra)} checkpoint keys with no template leaf "
+                f"{extra[:4]}{'...' if len(extra) > 4 else ''}")
         leaves = []
-        for p, leaf in leaves_paths:
-            key = jax.tree_util.keystr(p)
+        for (p, leaf), key in zip(leaves_paths, keys):
             arr = data[key]
-            leaves.append(jax.numpy.asarray(arr, dtype=leaf.dtype))
+            if isinstance(leaf, (bool, int, float)):
+                # Python-scalar template leaf (e.g. a step count or flag
+                # carried in a config-bearing pytree) — restore the same
+                # Python type, not a 0-d array
+                leaves.append(type(leaf)(arr.item()))
+            elif hasattr(leaf, "dtype"):
+                leaves.append(jax.numpy.asarray(arr, dtype=leaf.dtype))
+            else:
+                leaves.append(arr)
     return jax.tree_util.tree_unflatten(treedef, leaves), step

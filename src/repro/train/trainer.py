@@ -5,15 +5,19 @@ Two execution paths share the same step function:
 
 * ``ElasticTrainer.run`` — the legacy per-iteration Python loop over the
   discrete-event ``VolatileCluster``. Kept as the exact-semantics path
-  (checkpoint/restore, serve parity, dynamic strategies consulting the real
-  clock).
+  (per-iteration checkpointing, serve parity, dynamic strategies consulting
+  the real clock).
 * ``train_batched`` / ``ElasticTrainer.run_batched`` — the scan-native
   path: the elastic masked train step is folded into the batched engine's
   per-tick step, so an S-strategy × R-seed grid trains real (reduced)
   models end-to-end inside ONE ``lax.scan``+``vmap`` jit — price draw,
   bid→active-mask, masked-renormalized SGD update, and time/cost/idle
   accounting all on device, with donated model buffers and no host sync
-  between ticks.
+  between ticks. Checkpointing is scan-native too: ``snapshot_every=k``
+  emits the full batched carry every k ticks, `save_batched` /
+  `restore_batched` persist it through ``train/checkpoint.py``, and
+  ``ElasticTrainer.resume_batched`` restarts a preempted grid bit-exactly
+  mid-trace.
 
 Runs real (reduced) models on CPU for tests/examples/benchmarks; on hardware
 the same loop drives the full mesh (the step function is identical — the
@@ -23,6 +27,7 @@ from __future__ import annotations
 
 import dataclasses
 import functools
+import os
 from typing import Callable, Dict, List, Mapping, Optional, Sequence, Union
 
 import jax
@@ -131,7 +136,8 @@ class ElasticTrainer:
                     strategies: Optional[Mapping[str, Strategy]] = None,
                     n_ticks: Optional[int] = None,
                     n_batches: Optional[int] = None,
-                    batch_fn: Optional[Callable[[int], Dict]] = None):
+                    batch_fn: Optional[Callable[[int], Dict]] = None,
+                    snapshot_every: int = 0):
         """Scan-native training: the trainer's market/runtime plus a grid of
         strategies (default: its own) × seeds, every configuration training
         a real model end-to-end in one compiled call.
@@ -142,6 +148,14 @@ class ElasticTrainer:
         (``lm_batch`` indexed by iteration, or ``batch_fn``). Returns a
         `repro.sim.evaluate.BatchResult` whose per-iteration "errors" are
         the batch losses.
+
+        With ``snapshot_every = k`` the run emits the full batched carry
+        every k ticks; if the trainer has a ``checkpoint_path`` the latest
+        snapshot is persisted there *when the compiled call returns*, and
+        `resume_batched` restarts the grid from it bit-exactly. Note the
+        snapshots of a single jit call only reach the host at call return —
+        to survive a kill at any moment (losing at most k ticks), use
+        `train_batched_durable`, which persists every chunk as it runs.
         """
         from repro.sim.evaluate import BatchResult
 
@@ -150,7 +164,41 @@ class ElasticTrainer:
                      for name, s in strategies.items()]
         res = train_batched(
             self.job, scenarios, seeds, n_ticks=n_ticks,
-            n_batches=n_batches, batch_fn=batch_fn, batch_seed=self.seed)
+            n_batches=n_batches, batch_fn=batch_fn, batch_seed=self.seed,
+            snapshot_every=snapshot_every)
+        if self.checkpoint_path and res.snapshots is not None:
+            save_batched(self.checkpoint_path, res)
+        return BatchResult(names=[s.name for s in scenarios], result=res)
+
+    def resume_batched(self, seeds: Union[int, Sequence[int]] = 8,
+                       iterations: Optional[int] = None,
+                       strategies: Optional[Mapping[str, Strategy]] = None,
+                       n_ticks: Optional[int] = None,
+                       n_batches: Optional[int] = None,
+                       batch_fn: Optional[Callable[[int], Dict]] = None,
+                       snapshot_every: int = 0):
+        """Restart a preempted `run_batched` from ``checkpoint_path``: the
+        batched carry (every replica's params/opt_state/clock/cost and the
+        loss trajectories so far) is restored and the scan continues from
+        the checkpointed tick — with the same grid/seeds/tick budget the
+        final state is bit-exact with the uninterrupted run."""
+        if not self.checkpoint_path:
+            raise ValueError(
+                "resume_batched needs a checkpoint_path on the trainer")
+        from repro.sim.evaluate import BatchResult
+
+        strategies = strategies or {self.strategy.name: self.strategy}
+        scenarios = [self._scenario(s, iterations, name)
+                     for name, s in strategies.items()]
+        batch = engine.stack_scenarios(scenarios)
+        state, tick = restore_batched(self.checkpoint_path, self.job, batch,
+                                      seeds)
+        res = train_batched(
+            self.job, batch, seeds, n_ticks=n_ticks, n_batches=n_batches,
+            batch_fn=batch_fn, batch_seed=self.seed, donate=False,
+            snapshot_every=snapshot_every, init_state=state, tick0=tick)
+        if self.checkpoint_path and res.snapshots is not None:
+            save_batched(self.checkpoint_path, res)
         return BatchResult(names=[s.name for s in scenarios], result=res)
 
     def _scenario(self, strategy: Strategy, iterations: Optional[int],
@@ -173,14 +221,19 @@ class ElasticTrainer:
 
 def price_spec_from_market(market) -> engine.PriceSpec:
     """Map a legacy SpotMarket's price process onto a batchable PriceSpec:
-    IIDPrices → its distribution; Trace/TickPrices → tick-replay of the
-    trace (the engine consumes one entry per tick, so TickPrices gives
-    tick-exact parity)."""
+    IIDPrices → its distribution; TracePrices → *time-indexed* replay at
+    the trace's resolution (`PriceSpec.from_trace(..., step=proc.step)` —
+    exact under stochastic iteration durations); TickPrices → legacy
+    tick-replay (one entry per engine tick, for tick-exact parity)."""
+    from repro.sim.spot_market import TickPrices, TracePrices
+
     proc = market.process
     if hasattr(proc, "dist"):
         return engine.PriceSpec.from_dist(proc.dist)
-    if hasattr(proc, "trace"):
-        return engine.PriceSpec.from_trace(proc.trace)
+    if isinstance(proc, TracePrices):
+        return engine.PriceSpec.from_trace(proc.trace, step=proc.step)
+    if isinstance(proc, TickPrices):
+        return engine.PriceSpec.from_trace_ticks(proc.trace)
     raise TypeError(f"no batchable PriceSpec for {type(proc).__name__}")
 
 
@@ -230,7 +283,10 @@ def train_batched(job: JobConfig,
                   n_batches: Optional[int] = None,
                   batch_fn: Optional[Callable[[int], Dict]] = None,
                   batch_seed: int = 0,
-                  donate: bool = True) -> engine.EngineResult:
+                  donate: bool = True,
+                  snapshot_every: int = 0,
+                  init_state: Optional[engine.SimState] = None,
+                  tick0: int = 0) -> engine.EngineResult:
     """Train a real model under every scenario × seed in one compiled call.
 
     Folds the elastic masked train step into the batched engine: the whole
@@ -240,10 +296,37 @@ def train_batched(job: JobConfig,
     donated to the call by default (it is rebuilt per call from
     ``PRNGKey(job.seed)``, so nothing is lost).
 
+    Checkpointing: ``snapshot_every = k`` emits the full batched carry
+    (params, opt_state, clock, cost, trajectories — everything) every k
+    ticks into ``EngineResult.snapshots``; ``init_state``/``tick0`` resume
+    from a restored snapshot (same scenarios/seeds/tick budget), continuing
+    bit-exactly. See `save_batched` / `restore_batched`.
+
     Returns an EngineResult whose ``errors``/``losses`` trajectory holds
     the per-iteration batch loss and whose ``final_model`` stacks the
     trained (params, opt_state) per replica on a leading (S, R) axis.
+
+    Reproducibility note (inherited from the engine's padded batching):
+    per-tick stochastic draws are shaped by the *batch-global* padded
+    worker width, so a (scenario, seed) cell is bit-reproducible within
+    the same stacked grid — not across grids padded to different widths.
     """
+    scenarios, program, data, n_ticks = _prepare_batched(
+        job, scenarios, n_ticks=n_ticks, n_batches=n_batches,
+        batch_fn=batch_fn, batch_seed=batch_seed)
+    model0 = None if init_state is not None else init_train_state(
+        job.model, job, jax.random.PRNGKey(job.seed))
+    cfg = engine.SimConfig(n_ticks=n_ticks, snapshot_every=snapshot_every)
+    return engine.simulate_program(scenarios, program, model0, data, seeds,
+                                   cfg, donate=donate,
+                                   init_state=init_state, tick0=tick0)
+
+
+def _prepare_batched(job: JobConfig, scenarios, *, n_ticks, n_batches,
+                     batch_fn, batch_seed):
+    """Shared setup of the scan-native training paths (`train_batched` and
+    `train_batched_durable` must stay bit-exact equivalents): stack +
+    fleet-width check, batch stream, program, tick-budget default."""
     if not isinstance(scenarios, engine.ScenarioBatch):
         scenarios = engine.stack_scenarios(scenarios)
     if scenarios.n_max != job.n_workers:
@@ -255,7 +338,103 @@ def train_batched(job: JobConfig,
     n_batches = n_batches or j_max
     data = stack_batches(job, n_batches, seed=batch_seed, batch_fn=batch_fn)
     program = make_train_program(job, n_batches)
+    return scenarios, program, data, n_ticks or 2 * j_max + 16
+
+
+def batched_init_state(job: JobConfig,
+                       scenarios: Union[engine.ScenarioBatch,
+                                        Sequence[engine.Scenario]],
+                       seeds: Union[int, Sequence[int]]) -> engine.SimState:
+    """The (S, R) initial carry a batched training run starts from — and
+    therefore the *restore template* for `checkpoint.restore` (same model
+    init ``PRNGKey(job.seed)``, same trajectory shapes)."""
+    n_seeds = int(seeds) if np.isscalar(seeds) else len(seeds)
     model0 = init_train_state(job.model, job, jax.random.PRNGKey(job.seed))
-    cfg = engine.SimConfig(n_ticks=n_ticks or 2 * j_max + 16)
-    return engine.simulate_program(scenarios, program, model0, data, seeds,
-                                   cfg, donate=donate)
+    return engine.initial_state(scenarios, model0, n_seeds)
+
+
+def save_batched(path: str, result: engine.EngineResult,
+                 index: int = -1) -> int:
+    """Persist one snapshot of a ``snapshot_every`` run as a durable
+    checkpoint (atomic .npz via `checkpoint.save`); returns the snapshot's
+    absolute tick count (the ``tick0`` a resume passes back)."""
+    state, tick = engine.snapshot_state(result, index)
+    ckpt_mod.save(path, state, tick)
+    return tick
+
+
+def restore_batched(path: str, job: JobConfig,
+                    scenarios: Union[engine.ScenarioBatch,
+                                     Sequence[engine.Scenario]],
+                    seeds: Union[int, Sequence[int]]):
+    """Load a `save_batched` checkpoint back into a batched carry. Returns
+    ``(state, tick)`` for ``train_batched(init_state=state, tick0=tick)``;
+    raises a key-naming ValueError if the job/scenario grid drifted from
+    the one that was checkpointed."""
+    like = batched_init_state(job, scenarios, seeds)
+    return ckpt_mod.restore(path, like)
+
+
+def train_batched_durable(job: JobConfig,
+                          scenarios: Union[engine.ScenarioBatch,
+                                           Sequence[engine.Scenario]],
+                          seeds: Union[int, Sequence[int]] = 8, *,
+                          checkpoint_path: str,
+                          save_every: int,
+                          n_ticks: Optional[int] = None,
+                          n_batches: Optional[int] = None,
+                          batch_fn: Optional[Callable[[int], Dict]] = None,
+                          batch_seed: int = 0,
+                          resume: bool = True) -> engine.EngineResult:
+    """Preemption-*durable* batched training: the scan executes in
+    ``save_every``-tick jitted chunks on the host, persisting the full
+    batched carry to ``checkpoint_path`` after every chunk — so a process
+    killed at any moment loses at most ``save_every`` ticks of work, and
+    rerunning the same call (``resume=True``) picks up from the file.
+
+    This is the host-loop complement of ``train_batched(snapshot_every=k)``
+    (whose snapshots only reach the host when the single compiled call
+    returns): durability costs one host sync + .npz write per chunk.
+    The chunk start enters the jit as *data*, so every full-size chunk
+    shares one compiled program, and the chunked execution is bit-exact
+    with the single-call run (absolute-tick RNG folding).
+
+    Returns the final EngineResult — identical to the equivalent
+    ``train_batched(job, scenarios, seeds, n_ticks=n_ticks)``.
+    """
+    if save_every < 1:
+        raise ValueError(f"save_every={save_every} must be ≥ 1")
+    scenarios, program, data, n_ticks = _prepare_batched(
+        job, scenarios, n_ticks=n_ticks, n_batches=n_batches,
+        batch_fn=batch_fn, batch_seed=batch_seed)
+
+    if resume and os.path.exists(checkpoint_path):
+        state, tick = restore_batched(checkpoint_path, job, scenarios,
+                                      seeds)
+        if tick > n_ticks:
+            raise ValueError(
+                f"checkpoint {checkpoint_path} is at tick {tick}, beyond "
+                f"this run's n_ticks={n_ticks}")
+    else:
+        state, tick = batched_init_state(job, scenarios, seeds), 0
+
+    res = None
+    while tick < n_ticks:
+        step = min(save_every, n_ticks - tick)
+        cfg = engine.SimConfig(n_ticks=tick + step, snapshot_every=step)
+        res = engine.simulate_program(scenarios, program, None, data, seeds,
+                                      cfg, donate=False, init_state=state,
+                                      tick0=tick)
+        # the chunk's single snapshot IS its final carry — persist it
+        # before advancing (atomic write; a kill between chunks re-runs at
+        # most this chunk)
+        state, tick = engine.snapshot_state(res, -1)
+        ckpt_mod.save(checkpoint_path, state, tick)
+    if res is None:
+        # checkpoint already at n_ticks: materialize the result from the
+        # restored carry with a zero-tick call
+        res = engine.simulate_program(scenarios, program, None, data, seeds,
+                                      engine.SimConfig(n_ticks=n_ticks),
+                                      donate=False, init_state=state,
+                                      tick0=tick)
+    return res

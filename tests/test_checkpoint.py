@@ -48,6 +48,65 @@ def test_atomic_overwrite(tmp_path):
     assert not any(str(f).endswith(".tmp.npz") for f in os.listdir(tmp_path))
 
 
+def test_restore_python_scalar_leaves(tmp_path):
+    """Templates may carry Python scalars (step counts, flags) — restore
+    must return the same Python types, not 0-d arrays."""
+    state = {"w": np.arange(4.0, dtype=np.float32), "step": 3,
+             "lr": 0.25, "done": False}
+    path = str(tmp_path / "scalars.npz")
+    ck.save(path, state, step=1)
+    restored, step = ck.restore(path, state)
+    assert step == 1
+    assert restored["step"] == 3 and type(restored["step"]) is int
+    assert restored["lr"] == 0.25 and type(restored["lr"]) is float
+    assert restored["done"] is False
+    np.testing.assert_array_equal(np.asarray(restored["w"]), state["w"])
+
+
+def test_restore_names_missing_and_extra_keys(tmp_path):
+    """Structure drift must fail with a ValueError naming the offending
+    keys, not an opaque KeyError."""
+    path = str(tmp_path / "drift.npz")
+    ck.save(path, {"a": np.zeros(2), "gone": np.ones(3)}, step=4)
+    with pytest.raises(ValueError) as ei:
+        ck.restore(path, {"a": np.zeros(2), "added": np.zeros(1)})
+    msg = str(ei.value)
+    assert "added" in msg and "gone" in msg and "does not match" in msg
+
+
+def test_restore_rejects_non_checkpoint(tmp_path):
+    path = str(tmp_path / "not_ckpt.npz")
+    np.savez(path, a=np.zeros(2))
+    with pytest.raises(ValueError, match="__step__"):
+        ck.restore(path, {"a": np.zeros(2)})
+
+
+def test_batched_trainer_state_roundtrip(tmp_path):
+    """Round-trip the engine's full batched carry (SimState over an S×R
+    grid of (params, opt_state) replicas) — the checkpoint payload of a
+    scan-native training run."""
+    from repro.sim import engine
+
+    params, opt = _state()
+    scenarios = engine.stack_scenarios([
+        engine.Scenario(price=engine.PriceSpec.uniform(0.2, 1.0), alpha=0.1,
+                        bid_schedule=np.tile([0.8, 0.5], (6, 1)))
+        for _ in range(2)])
+    state = engine.initial_state(scenarios, (params, opt), n_seeds=3)
+    # perturb a few leaves so the roundtrip is not trivially zeros
+    state = state._replace(t=state.t + 1.5, j=state.j + 2)
+    path = str(tmp_path / "batched.npz")
+    ck.save(path, state, step=17)
+    restored, step = ck.restore(path, state)
+    assert step == 17
+    jax.tree.map(
+        lambda a, b: np.testing.assert_array_equal(np.asarray(a),
+                                                   np.asarray(b)),
+        state, restored)
+    # restored leaves keep the template dtypes (f32/i32, no weak types)
+    engine.assert_carry_dtypes(restored)
+
+
 def test_trainer_resume_after_preemption(tmp_path):
     """Kill the trainer mid-job; a fresh trainer restores and continues from
     the checkpointed iteration with identical parameters."""

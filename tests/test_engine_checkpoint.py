@@ -1,0 +1,167 @@
+"""Engine-level scan-native checkpointing and carry-dtype hygiene.
+
+``SimConfig.snapshot_every = k`` turns the tick scan into k-tick chunks
+whose outputs stack the full carry; ``simulate_program(init_state, tick0)``
+resumes from any snapshot bit-exactly (absolute-tick RNG folding). The
+dtype helpers pin the float32/int32 no-weak-type carry invariant that keeps
+the scan from promoting (and the jit from recompiling)."""
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.data.synthetic import QuadraticProblem
+from repro.sim import engine
+
+J = 20
+
+
+@pytest.fixture(scope="module")
+def setup():
+    quad = QuadraticProblem(dim=6, n_samples=64, cond=5.0, noise=0.2, seed=0)
+    w0 = quad.w_star + 1.0
+    alpha = 0.4 / quad.L
+    scenarios = engine.stack_scenarios([
+        engine.Scenario(price=engine.PriceSpec.uniform(0.2, 1.0),
+                        alpha=alpha, bid_schedule=np.tile([b, b], (J, 1)),
+                        rt_kind="exp", rt_lam=2.0, idle_step=0.5)
+        for b in (0.6, 0.9)])
+    program = engine.quadratic_program("full", 4)
+    data = engine.jax_quadratic(quad)
+    model0 = jnp.asarray(w0, jnp.float32)
+    return scenarios, program, data, model0
+
+
+def _final_equal(a, b):
+    for name in ("err_traj", "cost_traj", "time_traj", "y_traj", "j", "t",
+                 "total_cost", "total_idle"):
+        np.testing.assert_array_equal(
+            np.asarray(getattr(a, name, None))
+            if hasattr(a, name) else None,
+            np.asarray(getattr(b, name, None))
+            if hasattr(b, name) else None)
+
+
+def test_snapshot_stream_and_remainder(setup):
+    scenarios, program, data, model0 = setup
+    cfg = engine.SimConfig(n_ticks=50, grad="full", snapshot_every=12)
+    res = engine.simulate_program(scenarios, program, model0, data, [0, 1],
+                                  cfg)
+    # 50 ticks / every 12 → snapshots after ticks 12,24,36,48; the 2-tick
+    # remainder still runs (final j/t move past snapshot 4's)
+    np.testing.assert_array_equal(res.snapshot_ticks, [12, 24, 36, 48])
+    leaf = res.snapshots.t
+    assert leaf.shape == (2, 2, 4)
+    state, tick = engine.snapshot_state(res, -1)
+    assert tick == 48
+    assert state.t.shape == (2, 2)
+    # the clock never runs backwards across the snapshot stream (it stalls
+    # once a scenario completes its J iterations), final ≥ the last one
+    snaps_t = np.asarray(res.snapshots.t)
+    assert (np.diff(snaps_t, axis=-1) >= 0).all()
+    assert (res.total_time >= snaps_t[..., -1]).all()
+
+
+def test_resume_from_snapshot_is_bitexact(setup):
+    scenarios, program, data, model0 = setup
+    cfg = engine.SimConfig(n_ticks=60, grad="full", snapshot_every=16)
+    full = engine.simulate_program(scenarios, program, model0, data, [0, 1],
+                                   cfg)
+    state, tick = engine.snapshot_state(full, 1)          # tick 32
+    resumed = engine.simulate_program(
+        scenarios, program, None, data, [0, 1],
+        engine.SimConfig(n_ticks=60, grad="full"),
+        init_state=state, tick0=tick)
+    np.testing.assert_array_equal(resumed.errors, full.errors)
+    np.testing.assert_array_equal(resumed.costs, full.costs)
+    np.testing.assert_array_equal(resumed.times, full.times)
+    np.testing.assert_array_equal(resumed.iterations, full.iterations)
+    np.testing.assert_array_equal(resumed.total_time, full.total_time)
+    np.testing.assert_array_equal(resumed.total_cost, full.total_cost)
+    np.testing.assert_array_equal(np.asarray(resumed.final_model),
+                                  np.asarray(full.final_model))
+
+
+def test_no_snapshots_by_default(setup):
+    scenarios, program, data, model0 = setup
+    res = engine.simulate_program(scenarios, program, model0, data, [0],
+                                  engine.SimConfig(n_ticks=8, grad="full"))
+    assert res.snapshots is None and res.snapshot_ticks is None
+    with pytest.raises(ValueError, match="snapshot_every"):
+        engine.snapshot_state(res)
+
+
+def test_tick0_validation(setup):
+    scenarios, program, data, model0 = setup
+    with pytest.raises(ValueError, match="tick0"):
+        engine.simulate_program(scenarios, program, model0, data, [0],
+                                engine.SimConfig(n_ticks=8, grad="full"),
+                                tick0=9)
+
+
+def test_snapshot_every_beyond_budget_raises(setup):
+    """snapshot_every larger than the (remaining) tick budget would emit
+    zero snapshots — silently disabling checkpointing; it must fail."""
+    scenarios, program, data, model0 = setup
+    with pytest.raises(ValueError, match="snapshot_every"):
+        engine.simulate_program(
+            scenarios, program, model0, data, [0],
+            engine.SimConfig(n_ticks=8, grad="full", snapshot_every=9))
+    state = engine.initial_state(scenarios, model0, 1)
+    with pytest.raises(ValueError, match="remaining"):
+        engine.simulate_program(
+            scenarios, program, None, data, [0],
+            engine.SimConfig(n_ticks=20, grad="full", snapshot_every=8),
+            init_state=state, tick0=16)
+
+
+def test_handbuilt_trace_spec_without_times_rejected(setup):
+    """A PRICE_TRACE spec not built via from_trace has no timestamps and
+    would silently replay a constant price — stack_scenarios must refuse."""
+    bad = engine.PriceSpec(kind=engine.PRICE_TRACE, lo=0.2, hi=0.9,
+                           trace=np.linspace(0.2, 0.9, 5, dtype=np.float32))
+    sc = engine.Scenario(price=bad, alpha=0.1,
+                         bid_schedule=np.ones((4, 1)), name="bad-trace")
+    with pytest.raises(ValueError, match="from_trace"):
+        engine.stack_scenarios([sc])
+
+
+# ---------------------------------------------------------------------------
+# carry dtype hygiene
+# ---------------------------------------------------------------------------
+
+
+def test_initial_state_is_strongly_typed(setup):
+    scenarios, *_ = setup
+    # a Python-scalar model leaf arrives weakly typed; initial_state must
+    # strengthen it so the scan carry cannot promote
+    state = engine.initial_state(scenarios, {"w": 0.5, "n": 3}, 2)
+    engine.assert_carry_dtypes(state)          # does not raise
+    assert state.model["w"].dtype == jnp.float32
+    assert not state.model["w"].weak_type
+    assert not state.model["n"].weak_type
+    assert state.t.shape == (2, 2) and state.t.dtype == jnp.float32
+    assert state.err_traj.shape == (2, 2, scenarios.j_max)
+
+
+def test_assert_carry_dtypes_catches_weak_and_wrong(setup):
+    scenarios, *_ = setup
+    good = engine.initial_state(scenarios, jnp.zeros(3), 1)
+    engine.assert_carry_dtypes(good)
+    with pytest.raises(TypeError, match="SimState.t"):
+        engine.assert_carry_dtypes(good._replace(t=jnp.asarray(0.0)))
+    with pytest.raises(TypeError, match="SimState.j"):
+        engine.assert_carry_dtypes(
+            good._replace(j=good.j.astype(jnp.int8)))
+    with pytest.raises(TypeError, match="weakly typed"):
+        engine.assert_carry_dtypes(good._replace(model=jnp.asarray(1.0)))
+
+
+def test_canonicalize_model_preserves_values_and_dtypes():
+    tree = {"a": jnp.ones((2, 2)), "b": 1.5, "c": np.int32(4)}
+    out = engine.canonicalize_model(tree)
+    assert out["a"] is tree["a"] or np.array_equal(out["a"], tree["a"])
+    assert out["b"].dtype == jnp.float32 and not out["b"].weak_type
+    assert out["c"].dtype == jnp.int32 and not out["c"].weak_type
+    assert float(out["b"]) == 1.5 and int(out["c"]) == 4

@@ -1,9 +1,20 @@
-"""Legacy-loop ↔ vectorized-engine parity: given the same seed-derived
-price sequence (consumed one entry per market tick on both sides, via
-`TickPrices` and `PriceSpec.from_trace`), a deterministic runtime, and the
-exact gradient, the engine's (error, cost, time) trajectories must match the
-`VolatileCluster` Python loop within float32 tolerance."""
+"""Legacy-loop ↔ vectorized-engine parity.
+
+Two pins, matching the two trace-replay semantics:
+
+* tick-indexed (``PriceSpec.from_trace_ticks`` ↔ ``TickPrices``): both
+  sides consume one trace entry per market tick — tick-exact parity under a
+  deterministic runtime.
+* time-indexed (``PriceSpec.from_trace`` ↔ ``TracePrices``): the *wall
+  clock* selects the trace entry, so parity holds even under stochastic
+  (``exp``) iteration durations — the fig4 regime, where tick-indexed
+  replay reads prices at the wrong moments.
+
+With the exact gradient the engine's (error, cost, time) trajectories must
+match the ``VolatileCluster`` Python loop within float32 tolerance.
+"""
 import dataclasses
+from typing import List
 
 import numpy as np
 import pytest
@@ -14,7 +25,7 @@ from repro.core.strategies import Strategy
 from repro.data.synthetic import QuadraticProblem
 from repro.sim import engine
 from repro.sim.evaluate import run_spot_strategy
-from repro.sim.spot_market import SpotMarket, TickPrices
+from repro.sim.spot_market import SpotMarket, TickPrices, TracePrices
 
 J, T = 80, 1200
 
@@ -32,6 +43,23 @@ class _Fixed(Strategy):
         return J
 
 
+@dataclasses.dataclass
+class _ScriptedRuntime:
+    """Replays a prescribed per-iteration duration sequence — lets the
+    legacy loop consume the engine's own (stochastic) exp draws so the two
+    paths see identical iteration times."""
+
+    durs: List[float]
+
+    def __post_init__(self):
+        self._i = 0
+
+    def sample(self, rng, y) -> float:
+        d = self.durs[self._i]
+        self._i += 1
+        return float(d)
+
+
 @pytest.fixture(scope="module")
 def problem():
     quad = QuadraticProblem(dim=6, n_samples=64, cond=5.0, noise=0.2, seed=0)
@@ -47,27 +75,7 @@ SCENARIOS = [
 ]
 
 
-@pytest.mark.parametrize("name,dist,bids",
-                         SCENARIOS, ids=[s[0] for s in SCENARIOS])
-def test_engine_matches_legacy_loop(problem, name, dist, bids):
-    quad, w0, alpha = problem
-    rt = RuntimeModel(kind="det", r_const=1.0)
-    bids = np.asarray(bids, float)
-    # the shared seed-derived price sequence, float32 on both sides
-    trace = dist.sample(np.random.default_rng(7), size=T).astype(np.float32)
-
-    legacy = run_spot_strategy(
-        quad, w0, alpha, _Fixed(bids), SpotMarket(TickPrices(trace)), rt,
-        iterations=J, grad="full", seed=3, idle_step=0.5)
-
-    sc = engine.Scenario(
-        price=engine.PriceSpec.from_trace(trace), alpha=alpha,
-        bid_schedule=np.tile(bids, (J, 1)), rt_kind="det", rt_const=1.0,
-        idle_step=0.5)
-    res = engine.simulate([sc], quad, w0, [0],
-                          engine.SimConfig(n_ticks=T, grad="full"))
-
-    assert res.iterations[0, 0] == J
+def _assert_matches_legacy(res, legacy):
     np.testing.assert_allclose(res.times[0, 0, :J], legacy.times,
                                rtol=1e-5, atol=1e-4)
     np.testing.assert_allclose(res.costs[0, 0, :J], legacy.costs,
@@ -83,6 +91,127 @@ def test_engine_matches_legacy_loop(problem, name, dist, bids):
         legacy.summary["mean_inv_y"], rel=1e-5)
     assert res.total_idle[0, 0] == pytest.approx(legacy.summary["idle"],
                                                  rel=1e-5, abs=1e-4)
+
+
+@pytest.mark.parametrize("name,dist,bids",
+                         SCENARIOS, ids=[s[0] for s in SCENARIOS])
+def test_engine_matches_legacy_loop(problem, name, dist, bids):
+    """Tick-indexed replay (`from_trace_ticks`) ↔ call-counting TickPrices:
+    one entry per tick on both sides, deterministic runtime."""
+    quad, w0, alpha = problem
+    rt = RuntimeModel(kind="det", r_const=1.0)
+    bids = np.asarray(bids, float)
+    # the shared seed-derived price sequence, float32 on both sides
+    trace = dist.sample(np.random.default_rng(7), size=T).astype(np.float32)
+
+    legacy = run_spot_strategy(
+        quad, w0, alpha, _Fixed(bids), SpotMarket(TickPrices(trace)), rt,
+        iterations=J, grad="full", seed=3, idle_step=0.5)
+
+    sc = engine.Scenario(
+        price=engine.PriceSpec.from_trace_ticks(trace), alpha=alpha,
+        bid_schedule=np.tile(bids, (J, 1)), rt_kind="det", rt_const=1.0,
+        idle_step=0.5)
+    res = engine.simulate([sc], quad, w0, [0],
+                          engine.SimConfig(n_ticks=T, grad="full"))
+
+    assert res.iterations[0, 0] == J
+    _assert_matches_legacy(res, legacy)
+
+
+def test_fig4_trace_replay_matches_legacy_under_exp_runtimes(problem):
+    """The fig4 fidelity pin: time-indexed replay (`from_trace`) must match
+    the legacy `TracePrices` loop exactly even when iteration durations are
+    stochastic (rt_kind="exp"), i.e. when tick count and wall clock diverge.
+
+    The engine runs first with genuine exp-sampled durations; the legacy
+    loop then replays those exact durations (`_ScriptedRuntime`) against
+    the same wall-clock-indexed trace — every price must land at the same
+    moment on both sides."""
+    quad, w0, alpha = problem
+    step, idle = 0.5, 0.5
+    bids = np.asarray([0.6, 0.6, 0.6], float)
+    trace = UniformPrice(0.2, 1.0).sample(
+        np.random.default_rng(11), size=T).astype(np.float32)
+
+    sc = engine.Scenario(
+        price=engine.PriceSpec.from_trace(trace, step=step), alpha=alpha,
+        bid_schedule=np.tile(bids, (J, 1)), rt_kind="exp", rt_lam=2.0,
+        rt_delta=0.05, idle_step=idle)
+    res = engine.simulate([sc], quad, w0, [0],
+                          engine.SimConfig(n_ticks=600, grad="full"))
+    assert res.iterations[0, 0] == J
+
+    # reconstruct the engine's per-iteration durations from its trajectory:
+    # walk the same time-indexed price sequence, idling while no bid covers
+    # the price, and read each iteration's end time off the engine
+    period = step * len(trace)
+    t, durs = 0.0, []
+    for j in range(J):
+        while float(trace[int((t % period) / step) % len(trace)]) \
+                > bids.max():
+            t += idle
+        end = float(res.times[0, 0, j])
+        durs.append(end - t)
+        t = end
+    assert min(durs) > 0 and len(set(np.round(durs, 5))) > J // 2, \
+        "durations should be stochastic (exp draws), not constant"
+
+    legacy = run_spot_strategy(
+        quad, w0, alpha, _Fixed(bids),
+        SpotMarket(TracePrices(trace, step=step)), _ScriptedRuntime(durs),
+        iterations=J, grad="full", seed=3, idle_step=idle)
+    _assert_matches_legacy(res, legacy)
+
+    # regression direction: tick-indexed replay of the same trace reads
+    # prices at the wrong moments and must NOT reproduce the trajectory
+    sc_tick = engine.Scenario(
+        price=engine.PriceSpec.from_trace_ticks(trace), alpha=alpha,
+        bid_schedule=np.tile(bids, (J, 1)), rt_kind="exp", rt_lam=2.0,
+        rt_delta=0.05, idle_step=idle)
+    res_tick = engine.simulate([sc_tick], quad, w0, [0],
+                               engine.SimConfig(n_ticks=600, grad="full"))
+    assert not np.allclose(res_tick.costs[0, 0, :J], legacy.costs,
+                           rtol=1e-3)
+
+
+def test_trace_replay_explicit_timestamps_and_period(problem):
+    """`from_trace` with non-uniform explicit timestamps: the price paid at
+    each iteration is the entry whose timestamp was the last one ≤ the wall
+    clock, wrapping at `period`."""
+    quad, w0, alpha = problem
+    trace = np.array([0.30, 0.50, 0.70, 0.40], np.float32)
+    times = np.array([0.0, 1.5, 3.0, 7.0], np.float32)
+    Jt = 12
+    sc = engine.Scenario(
+        price=engine.PriceSpec.from_trace(trace, times=times, period=10.0),
+        alpha=alpha, bid_schedule=np.ones((Jt, 1)), rt_kind="det",
+        rt_const=1.0, idle_step=0.5)
+    res = engine.simulate([sc], quad, w0, [0],
+                          engine.SimConfig(n_ticks=Jt, grad="full"))
+    assert res.iterations[0, 0] == Jt
+    # iterations run back-to-back at t = 0, 1, ..., 11; cost increment per
+    # iteration = y·price·dur = the prevailing price
+    paid = np.diff(np.concatenate([[0.0], res.costs[0, 0, :Jt]]))
+    expect = [trace[np.searchsorted(times, t % 10.0, side="right") - 1]
+              for t in np.arange(Jt, dtype=float)]
+    np.testing.assert_allclose(paid, expect, rtol=1e-5, atol=1e-6)
+
+
+def test_time_trace_seed_offset_rolls_trace(problem):
+    """Per-seed variation for time-indexed traces: seed 0 replays verbatim,
+    other seeds roll the lookup index deterministically."""
+    quad, w0, alpha = problem
+    trace = np.linspace(0.3, 0.9, 17).astype(np.float32)
+    sc = engine.Scenario(
+        price=engine.PriceSpec.from_trace(trace), alpha=alpha,
+        bid_schedule=np.ones((20, 1)), rt_kind="det", rt_const=1.0,
+        idle_step=0.5)
+    cfg = engine.SimConfig(n_ticks=40, grad="full")
+    res = engine.simulate([sc], quad, w0, [0, 1], cfg)
+    assert not np.allclose(res.costs[0, 0], res.costs[0, 1])
+    again = engine.simulate([sc], quad, w0, [0, 1], cfg)
+    np.testing.assert_array_equal(res.costs, again.costs)
 
 
 def test_engine_seed_variation_and_determinism(problem):

@@ -2,11 +2,15 @@
 no-op semantics for idle iterations.
 
 Given the same seed-derived price sequence (consumed one entry per market
-tick on both sides via `TickPrices` / `PriceSpec.from_trace`), a
+tick on both sides via `TickPrices` / `PriceSpec.from_trace_ticks`), a
 deterministic runtime, and the same deterministic batch stream, the batched
 trainer's (loss, cost, time) trajectories must match the legacy
 per-iteration Python loop within float32 tolerance — the real-model
 counterpart of tests/test_engine_parity.py.
+
+Also covers scan-native checkpointing end to end: a batched grid killed
+mid-scan and restored from its durable snapshot must reproduce the
+uninterrupted run bit-exactly (losses, cost, clock, final model).
 """
 import numpy as np
 import pytest
@@ -19,7 +23,8 @@ from repro.core import bidding, strategies as strat
 from repro.core.cost_model import RuntimeModel, UniformPrice
 from repro.sim import engine
 from repro.sim.cluster import VolatileCluster
-from repro.sim.spot_market import IIDPrices, SpotMarket, TickPrices
+from repro.sim.spot_market import (IIDPrices, SpotMarket, TickPrices,
+                                   TracePrices)
 from repro.train.trainer import (ElasticTrainer, price_spec_from_market,
                                  train_batched)
 
@@ -126,8 +131,9 @@ def test_idle_ticks_are_true_noop(job):
     spiky[1::2] = base                            # every other tick runs
 
     def run(trace, n_ticks):
+        # tick-indexed replay: the interleaving is defined per tick
         sc = engine.Scenario(
-            price=engine.PriceSpec.from_trace(trace), alpha=0.0,
+            price=engine.PriceSpec.from_trace_ticks(trace), alpha=0.0,
             bid_schedule=np.tile(plan.plan_.bids, (J, 1)),
             rt_kind="det", rt_const=1.0, idle_step=0.25)
         return train_batched(job, [sc], seeds=[0], n_ticks=n_ticks)
@@ -147,9 +153,16 @@ def test_price_spec_from_market_roundtrip():
     spec = price_spec_from_market(SpotMarket(IIDPrices(dist)))
     assert (spec.kind, spec.lo, spec.hi) == (engine.PRICE_UNIFORM, 0.3, 0.9)
     trace = np.linspace(0.2, 0.8, 7).astype(np.float32)
+    # call-counting TickPrices → legacy tick-indexed replay
     spec = price_spec_from_market(SpotMarket(TickPrices(trace)))
+    assert spec.kind == engine.PRICE_TRACE_TICK
+    np.testing.assert_array_equal(spec.trace, trace)
+    # wall-clock TracePrices → time-indexed replay at the trace resolution
+    spec = price_spec_from_market(SpotMarket(TracePrices(trace, step=0.25)))
     assert spec.kind == engine.PRICE_TRACE
     np.testing.assert_array_equal(spec.trace, trace)
+    np.testing.assert_allclose(spec.times, 0.25 * np.arange(7))
+    assert spec.period == pytest.approx(0.25 * 7)
 
 
 def test_run_batched_preemptible_pads_fleet(job):
@@ -175,3 +188,144 @@ def test_train_batched_rejects_fleet_mismatch(job):
                          alpha=0.0, bid_schedule=np.tile([0.9, 0.9], (J, 1)))
     with pytest.raises(ValueError, match="fleet width"):
         train_batched(job, [sc], seeds=[0], n_ticks=4)
+
+
+# ---------------------------------------------------------------------------
+# scan-native checkpointing: kill mid-scan, restore, finish — bit-exact
+# ---------------------------------------------------------------------------
+
+
+def _grid(job):
+    return [engine.scenario_from_strategy(
+        _fixed([0.9, 0.9, 0.5, 0.5], name=f"g{i}"), alpha=0.1,
+        rt=RuntimeModel(kind="exp", lam=2.0, delta=0.05),
+        dist=UniformPrice(0.2, 1.0), n_max=N_W, idle_step=0.5,
+        name=f"g{i}") for i in range(2)]
+
+
+def _assert_results_bitexact(a, b):
+    np.testing.assert_array_equal(a.losses, b.losses)
+    np.testing.assert_array_equal(a.costs, b.costs)
+    np.testing.assert_array_equal(a.times, b.times)
+    np.testing.assert_array_equal(a.ys, b.ys)
+    np.testing.assert_array_equal(a.iterations, b.iterations)
+    np.testing.assert_array_equal(a.total_time, b.total_time)
+    np.testing.assert_array_equal(a.total_cost, b.total_cost)
+    np.testing.assert_array_equal(a.total_idle, b.total_idle)
+    for la, lb in zip(jax.tree.leaves(a.final_model),
+                      jax.tree.leaves(b.final_model)):
+        np.testing.assert_array_equal(np.asarray(la), np.asarray(lb))
+
+
+def test_kill_and_resume_batched_is_bitexact(job, tmp_path):
+    """The fig4-story guarantee: a batched grid run that is preempted
+    mid-scan, persisted via train/checkpoint.py, and resumed from disk ends
+    bit-for-bit where the uninterrupted run ends — trajectories, cost/time
+    accounting, and every model leaf."""
+    from repro.train.trainer import restore_batched, save_batched
+
+    scenarios, seeds, n_ticks, k = _grid(job), [0, 1], 30, 8
+    full = train_batched(job, scenarios, seeds=seeds, n_ticks=n_ticks,
+                         snapshot_every=k, donate=False)
+    assert full.snapshots is not None
+    np.testing.assert_array_equal(full.snapshot_ticks, [8, 16, 24])
+
+    # "preemption": all that survives is the snapshot written at tick 8
+    path = str(tmp_path / "batched.npz")
+    tick = save_batched(path, full, index=0)
+    assert tick == 8
+
+    state, tick = restore_batched(path, job, scenarios, seeds)
+    resumed = train_batched(job, scenarios, seeds=seeds, n_ticks=n_ticks,
+                            init_state=state, tick0=tick, donate=False)
+    _assert_results_bitexact(resumed, full)
+
+
+def test_resume_preserves_snapshot_stream(job, tmp_path):
+    """Resuming with snapshot_every re-emits the later snapshots, and they
+    equal the uninterrupted run's (same absolute ticks)."""
+    scenarios, seeds, n_ticks, k = _grid(job), [0], 30, 10
+    from repro.train.trainer import restore_batched, save_batched
+
+    full = train_batched(job, scenarios, seeds=seeds, n_ticks=n_ticks,
+                         snapshot_every=k, donate=False)
+    path = str(tmp_path / "batched.npz")
+    save_batched(path, full, index=0)                    # tick 10
+    state, tick = restore_batched(path, job, scenarios, seeds)
+    resumed = train_batched(job, scenarios, seeds=seeds, n_ticks=n_ticks,
+                            init_state=state, tick0=tick, snapshot_every=k,
+                            donate=False)
+    np.testing.assert_array_equal(resumed.snapshot_ticks, [20, 30])
+    full_last = jax.tree.map(lambda x: x[:, :, -1], full.snapshots)
+    res_last = jax.tree.map(lambda x: x[:, :, -1], resumed.snapshots)
+    for la, lb in zip(jax.tree.leaves(full_last), jax.tree.leaves(res_last)):
+        np.testing.assert_array_equal(np.asarray(la), np.asarray(lb))
+
+
+def test_train_batched_durable_chunks_and_resumes(job, tmp_path):
+    """The host-chunked durable driver: per-chunk persistence is bit-exact
+    with the single-call run, and a killed run (emulated by a shorter
+    first invocation) resumes from the file and still lands bit-exact."""
+    from repro.train.trainer import train_batched_durable
+
+    scenarios, seeds, n_ticks = _grid(job), [0, 1], 30
+    path = str(tmp_path / "durable.npz")
+    full = train_batched(job, scenarios, seeds=seeds, n_ticks=n_ticks,
+                         donate=False)
+
+    durable = train_batched_durable(
+        job, scenarios, seeds=seeds, n_ticks=n_ticks,
+        checkpoint_path=path, save_every=7)
+    _assert_results_bitexact(durable, full)
+    # the durable file sits at the final tick
+    from repro.train.trainer import restore_batched
+    _state, tick = restore_batched(path, job, scenarios, seeds)
+    assert tick == n_ticks
+
+    # "kill" after 14 ticks: run the driver with a truncated budget, then
+    # rerun the full one — it must pick up at tick 14, not restart
+    path2 = str(tmp_path / "killed.npz")
+    train_batched_durable(job, scenarios, seeds=seeds, n_ticks=14,
+                          checkpoint_path=path2, save_every=7)
+    _state, tick = restore_batched(path2, job, scenarios, seeds)
+    assert tick == 14
+    resumed = train_batched_durable(
+        job, scenarios, seeds=seeds, n_ticks=n_ticks,
+        checkpoint_path=path2, save_every=7)
+    _assert_results_bitexact(resumed, full)
+
+
+def test_elastic_trainer_run_and_resume_batched(job, tmp_path):
+    """Trainer-level wiring: run_batched(snapshot_every) persists the last
+    snapshot to checkpoint_path; resume_batched finishes the run from it,
+    matching the uninterrupted grid bit-exactly."""
+    rt = RuntimeModel(kind="exp", lam=2.0, delta=0.05)
+    path = str(tmp_path / "trainer.npz")
+    grid = {"high": _fixed([1.0] * N_W, name="high"),
+            "split": _fixed([1.0, 1.0, 0.5, 0.5], name="split")}
+
+    def make(ckpt):
+        return ElasticTrainer(
+            job=job, strategy=grid["high"], mode="spot",
+            checkpoint_path=ckpt,
+            cluster=VolatileCluster(
+                n_workers=N_W, runtime=rt, idle_step=0.5,
+                market=SpotMarket(IIDPrices(UniformPrice(0.2, 1.0)))))
+
+    n_ticks = 24
+    uninterrupted = make(None).run_batched(
+        seeds=2, iterations=J, strategies=grid, n_ticks=n_ticks)
+
+    # snapshotting run: every 8 ticks; the final snapshot (tick 24) lands
+    # in checkpoint_path, but pretend the run died right after tick 8 by
+    # overwriting with the first snapshot
+    first = make(path)
+    res = first.run_batched(seeds=2, iterations=J, strategies=grid,
+                            n_ticks=n_ticks, snapshot_every=8)
+    from repro.train.trainer import save_batched
+    save_batched(path, res.result, index=0)
+
+    resumed = make(path).resume_batched(seeds=2, iterations=J,
+                                        strategies=grid, n_ticks=n_ticks)
+    assert resumed.names == uninterrupted.names
+    _assert_results_bitexact(resumed.result, uninterrupted.result)
