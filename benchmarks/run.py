@@ -37,6 +37,8 @@ import time
 import numpy as np
 
 ROWS = []
+#: structured mirror of ROWS for --json output
+RESULTS = []
 
 #: --smoke: run each benchmark with a trivial tick/seed budget (CI mode).
 SMOKE = False
@@ -45,6 +47,8 @@ SMOKE = False
 def emit(name: str, us_per_call: float, derived: str):
     row = f"{name},{us_per_call:.1f},{derived}"
     ROWS.append(row)
+    RESULTS.append({"name": name, "us_per_call": round(us_per_call, 1),
+                    "derived": derived})
     print(row, flush=True)
 
 
@@ -135,6 +139,18 @@ def _timed(fn):
     t0 = time.time()
     out = fn()
     return out, (time.time() - t0) * 1e6
+
+
+def _timed_best(fn, n: int = 5):
+    """(result, µs) best-of-n after a compile warmup — for sub-10ms calls,
+    where a single sample is at the mercy of scheduler noise."""
+    out = fn()
+    best = float("inf")
+    for _ in range(1 if SMOKE else n):
+        t0 = time.perf_counter()
+        fn()
+        best = min(best, (time.perf_counter() - t0) * 1e6)
+    return out, best
 
 
 def _emit_spot_grid(tag, bres, strategies, eps_emp, wall_us_per_scenario):
@@ -437,6 +453,74 @@ def bench_trainer():
          f"n_snapshots={len(bres_snap.snapshot_ticks)};"
          f"overhead_vs_plain_pct={(us_snap / us_batched - 1) * 100:.1f}")
 
+    # megabatched layout (train.megabatch): the replica axis folded into
+    # blocked flat params + a widened batch dim, hand-written backward,
+    # Eq.-(5) renormalization fused into the update. Market trajectories
+    # are bit-exact with the vmapped path (tests/test_megabatch.py).
+    mres, us_mega = _timed(lambda: train_batched(
+        job, scenarios, seeds=n_seeds, n_ticks=n_ticks, megabatch=True))
+    emit("trainer_megabatch", us_mega / cells,
+         f"speedup_vs_vmapped={us_batched / us_mega:.2f}x;"
+         f"final_loss={_nanmean(mres.losses[..., -1]):.3f}")
+    _, us_fused = _timed(lambda: train_batched(
+        job, scenarios, seeds=n_seeds, n_ticks=n_ticks, megabatch=True,
+        use_fused_update=True))
+    emit("trainer_megabatch_fused", us_fused / cells,
+         f"speedup_vs_vmapped={us_batched / us_fused:.2f}x")
+
+    # step-level: one R-replica elastic update isolated from the engine
+    # (no market draws / trajectory writes) — the apples-to-apples view of
+    # the layout change itself
+    import jax.numpy as jnp
+
+    from repro.train import megabatch as mb
+    from repro.train.train_step import init_train_state
+
+    r_step = cells
+    b_sz, s_len = job.shape.global_batch, job.shape.seq_len
+    params, opt = init_train_state(job.model, job, jax.random.PRNGKey(0))
+    rng = np.random.default_rng(0)
+    tokens = jnp.asarray(
+        rng.integers(0, job.model.vocab_size, (r_step, b_sz, s_len)),
+        jnp.int32)
+    labels = jnp.asarray(
+        rng.integers(0, job.model.vocab_size, (r_step, b_sz, s_len)),
+        jnp.int32)
+    masks = jnp.asarray(rng.integers(0, 2, (r_step, n_w)), jnp.float32)
+    jj = jnp.zeros((r_step,), jnp.int32)
+    run_flags = jnp.ones((r_step,), bool)
+
+    vstep_inner = make_train_step(job.model, job, remat="none")
+
+    def vcell(p, o, tok, lab, m, j):
+        np_, no, met = vstep_inner(p, o, {"tokens": tok, "labels": lab},
+                                   m, j)
+        return np_, no, met["loss"]
+
+    tile = lambda x: jnp.tile(x[None], (r_step,) + (1,) * x.ndim)
+    p_r, o_r = jax.tree.map(tile, params), jax.tree.map(tile, opt)
+    vmapped_step = jax.jit(jax.vmap(vcell))
+    _, us_vstep = _timed_best(lambda: jax.block_until_ready(
+        vmapped_step(p_r, o_r, tokens, labels, masks, jj)))
+
+    flat0 = mb.pack_state(params, opt, job.model, job.momentum)
+    flat = jax.tree.map(tile, flat0)
+    mstep = jax.jit(mb.make_megabatch_step(job.model, job))
+    _, us_mstep = _timed_best(lambda: jax.block_until_ready(
+        mstep(flat, tokens, labels, masks, jj, run_flags)))
+    mfstep = jax.jit(
+        mb.make_megabatch_step(job.model, job, use_fused_update=True))
+    _, us_mfstep = _timed_best(lambda: jax.block_until_ready(
+        mfstep(flat, tokens, labels, masks, jj, run_flags)))
+    emit("trainer_vmapped_step", us_vstep,
+         f"R={r_step};B={b_sz};S={s_len}")
+    emit("trainer_megabatch_step", us_mstep, f"R={r_step};layout=flat")
+    emit("trainer_megabatch_step_fused", us_mfstep,
+         f"R={r_step};update=kernels.fused_elastic_update")
+    emit("trainer_step_speedup", 0.0,
+         f"megabatch_vs_vmapped={us_vstep / us_mstep:.2f}x;"
+         f"fused_vs_vmapped={us_vstep / us_mfstep:.2f}x")
+
     def legacy_cell(strategy, seed, step_override=None):
         cluster = VolatileCluster(
             n_workers=n_w, runtime=rt, idle_step=rt.expected(n_w),
@@ -643,6 +727,10 @@ def main() -> None:
     ap.add_argument("--smoke", action="store_true",
                     help="2-tick/2-seed CI mode: exercise every perf path "
                          "in seconds; numbers are not meaningful")
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="also write the rows as machine-readable JSON "
+                         "(name/us_per_call/derived per row, plus the "
+                         "backend and run configuration)")
     args = ap.parse_args()
     if args.smoke:
         global SMOKE
@@ -655,6 +743,22 @@ def main() -> None:
     print("name,us_per_call,derived")
     for n in names:
         BENCHES[n]()
+    if args.json:
+        import jax
+
+        payload = {
+            "benchmarks": names,
+            "smoke": SMOKE,
+            "backend": jax.default_backend(),
+            "device_count": jax.device_count(),
+            "generated_utc": time.strftime("%Y-%m-%dT%H:%M:%SZ",
+                                           time.gmtime()),
+            "rows": RESULTS,
+        }
+        with open(args.json, "w") as f:
+            json.dump(payload, f, indent=2)
+            f.write("\n")
+        print(f"wrote {args.json} ({len(RESULTS)} rows)", flush=True)
 
 
 if __name__ == '__main__':

@@ -40,9 +40,16 @@ def weighted_mean(values: jax.Array, weights: jax.Array) -> jax.Array:
     the surviving Σ w·v (nonzero when weights are fractional) instead of
     erasing it. The ``where`` keeps jit total — no NaN from 0/0 — while
     making the all-preempted step a true no-op; the engine additionally
-    gates the whole model update on the iteration running."""
+    gates the whole model update on the iteration running.
+
+    The denominator is Σ w itself whenever it is positive — NOT an
+    ε-clamp. Fractional weights can make Σ w arbitrarily small but
+    nonzero (e.g. importance-scaled masks), and ``max(Σw, ε)`` would
+    silently shrink the mean by Σw/ε there instead of returning the
+    exact Σ w·v / Σ w; the ``where`` on both numerator path and
+    denominator keeps 0/0 out of the gradient."""
     w_sum = weights.sum()
-    mean = (values * weights).sum() / jnp.maximum(w_sum, 1e-9)
+    mean = (values * weights).sum() / jnp.where(w_sum > 0, w_sum, 1.0)
     return jnp.where(w_sum > 0, mean, 0.0)
 
 

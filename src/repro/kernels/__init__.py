@@ -1,3 +1,20 @@
 # OPTIONAL layer. Add <name>.py (or .cu) + ops.py + ref.py ONLY
 # for compute hot-spots the paper itself optimizes with a custom
 # kernel. Leave this package empty if the paper has none.
+"""Pallas kernels: flash attention, the SSD chunk scan, and the fused
+elastic SGD update. Every kernel resolves ``interpret=None`` through
+`auto_interpret`, so on CPU-only hosts (CI) the interpreter runs the real
+kernel code path instead of it being effectively skipped."""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+
+
+def auto_interpret(interpret: "Optional[bool]" = None) -> bool:
+    """Kernel execution mode: explicit True/False wins; ``None``
+    auto-selects interpret mode when no GPU/TPU backend is present."""
+    if interpret is None:
+        return jax.default_backend() == "cpu"
+    return interpret

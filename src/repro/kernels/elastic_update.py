@@ -1,0 +1,91 @@
+"""Fused elastic SGD update (Pallas): Eq. (5)'s masked-renormalized mean
+gradient folded into the momentum/parameter apply, over the replica-blocked
+flat parameter layout of ``train.megabatch``.
+
+The megabatched trainer computes gradients of the *sum*-form loss
+(Σ_tokens w·nll), so per replica the Eq.-(5) renormalization is a scalar:
+``ḡ = g_sum / Σw`` when Σw > 0, exactly 0 when every worker is preempted
+(the ``core.elastic.weighted_mean`` semantics). This kernel fuses, per
+(replica, parameter-block) grid cell:
+
+    inv  = Σw > 0 ? 1/Σw : 0          # renormalize, exact-zero on Σw = 0
+    v'   = μ·v + g_sum·inv            # SGD momentum (non-nesterov)
+    p'   = p − lr·v'
+    p,v  = running ? (p', v') : (p, v)   # idle/finished ticks are no-ops
+
+One kernel launch updates every parameter of every replica: inputs are the
+flat ``(R, P)`` parameter/momentum/gradient blocks plus per-replica scalars
+``w_sum``/``running``/``lr`` (kept as (R, 1) columns so each grid row sees
+its own scalars without gather logic). The grid is (R, P/block): rows are
+independent replicas, blocks stream through VMEM.
+
+Validated on CPU with interpret=True against ``ref.elastic_update_reference``
+(see tests/test_megabatch.py); on CPU execution paths the jnp reference is
+the compiled fallback (``kernels.ops.fused_elastic_update``).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_BLOCK_P = 512
+
+
+def _update_kernel(p_ref, v_ref, g_ref, w_ref, run_ref, lr_ref,
+                   p_out, v_out, *, momentum: float):
+    w = w_ref[0, 0]
+    # exact 0 on all-preempted; the 1e-6 clamp mirrors train_step's
+    # documented grad normalization (max(Σw, 1e-6)) bit-for-bit
+    inv = jnp.where(w > 0, 1.0 / jnp.maximum(w, 1e-6), 0.0)
+    run = run_ref[0, 0] > 0
+    lr = lr_ref[0, 0]
+    v = v_ref[0, :]
+    p = p_ref[0, :]
+    v_new = momentum * v + g_ref[0, :] * inv
+    p_new = p - lr * v_new
+    p_out[0, :] = jnp.where(run, p_new, p)
+    v_out[0, :] = jnp.where(run, v_new, v)
+
+
+@functools.partial(jax.jit, static_argnames=("momentum", "block_p",
+                                             "interpret"))
+def elastic_sgd_update(params: jax.Array, mom: jax.Array, grads: jax.Array,
+                       w_sum: jax.Array, running: jax.Array, lr: jax.Array,
+                       *, momentum: float = 0.9,
+                       block_p: int = DEFAULT_BLOCK_P,
+                       interpret: Optional[bool] = None,
+                       ) -> Tuple[jax.Array, jax.Array]:
+    """params/mom/grads: (R, P) f32; w_sum/running/lr: (R,). Returns the
+    updated (params, mom). ``grads`` are SUM-form (unnormalized) gradients;
+    the Eq.-(5) division by Σw happens inside the kernel."""
+    r, p_dim = params.shape
+    if interpret is None:
+        interpret = jax.default_backend() == "cpu"
+    blk = min(block_p, p_dim)
+    pad = (-p_dim) % blk
+    if pad:
+        widen = lambda x: jnp.pad(x, ((0, 0), (0, pad)))
+        params, mom, grads = widen(params), widen(mom), widen(grads)
+    cols = lambda x, dt: x.astype(dt).reshape(r, 1)
+    w2 = cols(w_sum, jnp.float32)
+    run2 = cols(running, jnp.float32)
+    lr2 = cols(lr, jnp.float32)
+
+    row = pl.BlockSpec((1, blk), lambda i, j: (i, j))
+    scal = pl.BlockSpec((1, 1), lambda i, j: (i, 0))
+    out_shape = jax.ShapeDtypeStruct(params.shape, params.dtype)
+    p_new, v_new = pl.pallas_call(
+        functools.partial(_update_kernel, momentum=momentum),
+        grid=(r, params.shape[1] // blk),
+        in_specs=[row, row, row, scal, scal, scal],
+        out_specs=(row, row),
+        out_shape=(out_shape, out_shape),
+        interpret=interpret,
+    )(params, mom, grads, w2, run2, lr2)
+    if pad:
+        p_new, v_new = p_new[:, :p_dim], v_new[:, :p_dim]
+    return p_new, v_new

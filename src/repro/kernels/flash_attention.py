@@ -100,8 +100,8 @@ def flash_attention(q, k, v, *, causal: bool = True,
     _, hkv, t, _ = k.shape
     assert h % hkv == 0, (h, hkv)
     g = h // hkv
-    if interpret is None:
-        interpret = jax.default_backend() == "cpu"
+    from repro.kernels import auto_interpret
+    interpret = auto_interpret(interpret)
 
     block_q = min(block_q, max(s, 16))
     block_k = min(block_k, max(t, 16))

@@ -8,8 +8,30 @@ from typing import Optional, Tuple
 import jax
 import jax.numpy as jnp
 
+from repro.kernels import auto_interpret, ref
+from repro.kernels.elastic_update import elastic_sgd_update
 from repro.kernels.flash_attention import flash_attention
 from repro.kernels.ssd_scan import ssd_chunk_pallas
+
+
+def fused_elastic_update(params, mom, grads, w_sum, running, lr, *,
+                         momentum: float = 0.9,
+                         interpret: Optional[bool] = None):
+    """Fused Eq.-(5) renormalization + gated momentum-SGD apply over the
+    replica-blocked flat (R, P) layout.
+
+    Execution-mode policy (the trainer's ``use_fused_update`` lands here):
+    on GPU/TPU the Pallas kernel runs compiled; with ``interpret=True`` it
+    runs interpreted (the CPU-CI correctness path); with ``interpret=None``
+    on a CPU-only host the jnp reference executes instead — it is the same
+    fused expression, XLA-fused, and bit-tested against the kernel, so CPU
+    callers get the semantics at full speed rather than interpreter
+    throughput."""
+    if interpret is None and jax.default_backend() == "cpu":
+        return ref.elastic_update_reference(params, mom, grads, w_sum,
+                                            running, lr, momentum=momentum)
+    return elastic_sgd_update(params, mom, grads, w_sum, running, lr,
+                              momentum=momentum, interpret=interpret)
 
 
 @functools.partial(jax.jit, static_argnames=("causal", "window", "q_offset",

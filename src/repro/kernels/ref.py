@@ -35,6 +35,23 @@ def mha_reference(q, k, v, *, causal: bool = True,
                       v.astype(jnp.float32)).astype(q.dtype)
 
 
+def elastic_update_reference(params, mom, grads, w_sum, running, lr, *,
+                             momentum: float = 0.9):
+    """Pure-jnp oracle for kernels.elastic_update.elastic_sgd_update.
+
+    params/mom/grads: (R, P); w_sum/running/lr: (R,). grads are SUM-form;
+    the masked-renormalized mean (Eq. (5), exact 0 when Σw = 0 — the
+    ``core.elastic.weighted_mean`` semantics) and the gated momentum-SGD
+    apply are fused here exactly as in the kernel."""
+    w = w_sum.astype(jnp.float32)[:, None]
+    inv = jnp.where(w > 0, 1.0 / jnp.maximum(w, 1e-6), 0.0)
+    run = (running.astype(jnp.float32) > 0)[:, None]
+    lr = lr.astype(jnp.float32)[:, None]
+    v_new = momentum * mom + grads * inv
+    p_new = params - lr * v_new
+    return (jnp.where(run, p_new, params), jnp.where(run, v_new, mom))
+
+
 def ssd_reference(xh, dt, a_h, bm, cm):
     """Naive per-token SSD recurrence (the semantic ground truth).
 

@@ -83,8 +83,8 @@ def ssd_chunk_pallas(xh, dt, a_h, bm, cm, *, chunk: int,
     assert s % q == 0
     nc = s // q
     rep = h // g
-    if interpret is None:
-        interpret = jax.default_backend() == "cpu"
+    from repro.kernels import auto_interpret
+    interpret = auto_interpret(interpret)
 
     # layout: (B, H, nc, Q, ...) so the grid walks contiguous blocks
     x_l = xh.transpose(0, 2, 1, 3).reshape(b, h, nc, q, p)

@@ -69,7 +69,25 @@ def main():
     ap.add_argument("--batch", type=int, default=32)
     ap.add_argument("--seq", type=int, default=64)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--batched", action="store_true",
+                    help="scan-native engine: strategy × --seeds replicas "
+                         "trained in one compiled call (implies --local)")
+    ap.add_argument("--seeds", type=int, default=4,
+                    help="number of market seeds for --batched")
+    ap.add_argument("--megabatch", action="store_true",
+                    help="fold the replica axis into blocked params + a "
+                         "widened batch dim instead of outer vmap "
+                         "(requires --batched; dense fp32 SGD models only)")
+    ap.add_argument("--fused-update", action="store_true",
+                    help="apply the elastic SGD update with the fused "
+                         "Pallas kernel (requires --megabatch)")
     args = ap.parse_args()
+    if args.fused_update and not args.megabatch:
+        ap.error("--fused-update requires --megabatch")
+    if args.megabatch and not args.batched:
+        ap.error("--megabatch requires --batched")
+    if args.batched:
+        args.local = True
 
     if not args.local:
         from repro.launch.dryrun import lower_one
@@ -104,6 +122,17 @@ def main():
     from repro.train.trainer import ElasticTrainer
     trainer = ElasticTrainer(job=job, cluster=cluster, strategy=strategy,
                              seed=args.seed)
+    if args.batched:
+        res = trainer.run_batched(seeds=args.seeds,
+                                  iterations=args.iterations,
+                                  megabatch=args.megabatch,
+                                  use_fused_update=args.fused_update)
+        out = {name: res.run(name).summary for name in res.names}
+        out["_engine"] = {"replicas": len(res.names) * res.n_seeds,
+                          "megabatch": args.megabatch,
+                          "fused_update": args.fused_update}
+        print(json.dumps(out, indent=1, default=float))
+        return
     summary = trainer.run(iterations=args.iterations)
     del summary["log"]
     print(json.dumps(summary, indent=1, default=float))

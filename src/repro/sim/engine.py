@@ -498,6 +498,22 @@ class ModelProgram:
     (``jnp.where`` over every leaf), so the step need not handle the
     all-preempted / finished cases — idle ticks are true no-ops.
 
+    ``blocked=True`` selects the megabatched scan layout instead: the tick
+    scan runs *outside* the grid vmap, the market logic is vmapped per
+    (scenario, seed) cell, and ``step_fn`` is called ONCE per tick over the
+    whole grid with leading (S, R) axes on every argument and the extra
+    trailing ``running`` argument::
+
+        step_fn(model, data, key, mask, j, alpha, running)
+            model: pytree, leaves (S, R, ...);  key: (S, R) PRNG keys
+            mask: (S, R, n_max) f32;  j/alpha/running: (S, R)
+            -> (new_model, metric (S, R) f32)
+
+    A blocked step must gate its own output on ``running`` (the engine
+    skips its per-leaf ``where`` pass — the fused update does the gating
+    element-for-element). ``train.trainer.make_megabatch_train_program``
+    builds such programs over the flat replica-blocked parameter layout.
+
     Instances hash by identity (``eq=False``) and are jit static arguments:
     build them once (module constant / ``lru_cache``) or every call
     recompiles.
@@ -505,6 +521,7 @@ class ModelProgram:
 
     step_fn: Callable[..., Any]
     name: str = "program"
+    blocked: bool = False
 
 
 @functools.lru_cache(maxsize=None)
@@ -705,6 +722,67 @@ def _draw_price(sc: ScenarioBatch, key, k, seed, t) -> jnp.ndarray:
                                       p_gauss, p_unif))))
 
 
+class TickMarket(NamedTuple):
+    """One cell's market outcome for one tick — everything `_sim_one.tick`
+    needs besides the model step itself."""
+
+    mask: jnp.ndarray            # (n_max,) bool active-worker mask
+    y: jnp.ndarray               # Σ mask (f32)
+    running: jnp.ndarray         # bool: the iteration actually runs
+    idling: jnp.ndarray          # bool: alive but all-preempted
+    bucket: jnp.ndarray          # updated plan-table bucket (i32)
+    cost_inc: jnp.ndarray        # cost of this tick (0 unless running)
+    idle_inc: jnp.ndarray        # idle-time increment (0 unless idling)
+    dt: jnp.ndarray              # wall-clock advance
+    k_grad: jnp.ndarray          # the model step's PRNG key
+
+
+def _market_tick(sc: ScenarioBatch, base, seed, t, j, bucket0,
+                 k) -> TickMarket:
+    """Market/accounting logic for one (scenario, seed) cell at absolute
+    tick ``k``: price draw, plan-table bucket latch, bid/preemption mask,
+    runtime and cost. Single source of truth — `_sim_one` calls it inside
+    its per-cell scan, `_sim_blocked` vmaps it over the whole grid — so the
+    two layouts consume identical RNG streams and stay bit-exact."""
+    j_max = sc.bid_table.shape[1]
+    n_max = sc.bid_table.shape[2]
+    kk = jax.random.fold_in(base, k)
+    k_price, k_dur, k_grad, k_up = jax.random.split(kk, 4)
+    price = _draw_price(sc, k_price, k, seed, t)
+
+    # plan-table bucket: latched from the wall clock at the first tick
+    # of iteration `replan_at` (cf. DynamicBids consulting the clock
+    # once when it replans), 0 (the t=0 plan) before that
+    cur_bucket = jnp.sum(t >= sc.bucket_starts).astype(jnp.int32) - 1
+    bucket = jnp.where((bucket0 < 0) & (j >= sc.replan_at),
+                       cur_bucket, bucket0)
+    row = jnp.minimum(j, j_max - 1)
+    bids = sc.bid_table[jnp.maximum(bucket, 0), row]         # (N,)
+    mask_spot = spot_active_mask(bids, price)
+    prov = sc.worker_schedule[row]
+    mask_pre = (jnp.arange(n_max) < prov) & preemptible_active(
+        jax.random.uniform(k_up, (n_max,)), sc.preempt_q)
+    mask = jnp.where(sc.mode == PREEMPTIBLE, mask_pre, mask_spot)
+    y = jnp.sum(mask.astype(jnp.float32))
+
+    done = j >= sc.J
+    running = (y >= 1.0) & ~done
+    idling = ~running & ~done
+
+    # runtime R(y): max of the active workers' exp(λ) draws + Δ, or R
+    draws = jax.random.exponential(k_dur, (n_max,)) / sc.rt_lam
+    dur_exp = jnp.max(jnp.where(mask, draws, 0.0)) + sc.rt_delta
+    dur = jnp.where(sc.rt_kind == 1, sc.rt_const, dur_exp)
+    price_paid = jnp.where(sc.mode == PREEMPTIBLE, sc.on_demand_price,
+                           price)
+    cost_inc = jnp.where(running, iteration_cost(y, price_paid, dur), 0.0)
+    idle_inc = jnp.where(idling, sc.idle_step, 0.0)
+    dt = jnp.where(running, dur, idle_inc)
+    return TickMarket(mask=mask, y=y, running=running, idling=idling,
+                      bucket=bucket, cost_inc=cost_inc, idle_inc=idle_inc,
+                      dt=dt, k_grad=k_grad)
+
+
 def _sim_one(sc: ScenarioBatch, state0: SimState, data, seed,
              program: ModelProgram, n_run: int, k_snap: int, tick0):
     """Simulate one scenario × one seed (vmapped twice by `simulate`),
@@ -719,70 +797,38 @@ def _sim_one(sc: ScenarioBatch, state0: SimState, data, seed,
     after each chunk (the checkpoint stream); otherwise snapshots is
     None."""
     j_max = sc.bid_table.shape[1]
-    n_max = sc.bid_table.shape[2]
     base = jax.random.fold_in(jax.random.PRNGKey(20), seed)
     assert_carry_dtypes(state0)
 
     def tick(state: SimState, k):
-        kk = jax.random.fold_in(base, k)
-        k_price, k_dur, k_grad, k_up = jax.random.split(kk, 4)
-        price = _draw_price(sc, k_price, k, seed, state.t)
-
-        # plan-table bucket: latched from the wall clock at the first tick
-        # of iteration `replan_at` (cf. DynamicBids consulting the clock
-        # once when it replans), 0 (the t=0 plan) before that
-        cur_bucket = jnp.sum(state.t >= sc.bucket_starts).astype(
-            jnp.int32) - 1
-        bucket = jnp.where((state.bucket < 0) & (state.j >= sc.replan_at),
-                           cur_bucket, state.bucket)
-        row = jnp.minimum(state.j, j_max - 1)
-        bids = sc.bid_table[jnp.maximum(bucket, 0), row]     # (N,)
-        mask_spot = spot_active_mask(bids, price)
-        prov = sc.worker_schedule[row]
-        mask_pre = (jnp.arange(n_max) < prov) & preemptible_active(
-            jax.random.uniform(k_up, (n_max,)), sc.preempt_q)
-        mask = jnp.where(sc.mode == PREEMPTIBLE, mask_pre, mask_spot)
-        y = jnp.sum(mask.astype(jnp.float32))
-
-        done = state.j >= sc.J
-        running = (y >= 1.0) & ~done
-        idling = ~running & ~done
-
-        # runtime R(y): max of the active workers' exp(λ) draws + Δ, or R
-        draws = jax.random.exponential(k_dur, (n_max,)) / sc.rt_lam
-        dur_exp = jnp.max(jnp.where(mask, draws, 0.0)) + sc.rt_delta
-        dur = jnp.where(sc.rt_kind == 1, sc.rt_const, dur_exp)
-        price_paid = jnp.where(sc.mode == PREEMPTIBLE, sc.on_demand_price,
-                               price)
-        cost_inc = jnp.where(running, iteration_cost(y, price_paid, dur),
-                             0.0)
-        dt = jnp.where(running, dur, jnp.where(idling, sc.idle_step, 0.0))
+        m = _market_tick(sc, base, seed, state.t, state.j, state.bucket, k)
 
         # one model iteration; the update only lands when the iteration
         # actually ran — idle/finished ticks are true no-ops on every leaf
         stepped, metric = program.step_fn(
-            state.model, data, k_grad, mask.astype(jnp.float32), state.j,
-            sc.alpha)
+            state.model, data, m.k_grad, m.mask.astype(jnp.float32),
+            state.j, sc.alpha)
         model = jax.tree.map(
-            lambda new, old: jnp.where(running, new, old), stepped,
+            lambda new, old: jnp.where(m.running, new, old), stepped,
             state.model)
 
-        t_new = state.t + dt
-        cost_new = state.total_cost + cost_inc
-        idle_new = state.total_idle + jnp.where(idling, sc.idle_step, 0.0)
+        t_new = state.t + m.dt
+        cost_new = state.total_cost + m.cost_inc
+        idle_new = state.total_idle + m.idle_inc
 
         idx = jnp.minimum(state.j, j_max - 1)
 
         def put(traj, val):
-            return traj.at[idx].set(jnp.where(running, val, traj[idx]))
+            return traj.at[idx].set(jnp.where(m.running, val, traj[idx]))
 
         new = SimState(
-            t=t_new, j=state.j + running.astype(jnp.int32), bucket=bucket,
+            t=t_new, j=state.j + m.running.astype(jnp.int32),
+            bucket=m.bucket,
             total_cost=cost_new, total_idle=idle_new, model=model,
             err_traj=put(state.err_traj, metric),
             cost_traj=put(state.cost_traj, cost_new),
             time_traj=put(state.time_traj, t_new),
-            y_traj=put(state.y_traj, y))
+            y_traj=put(state.y_traj, m.y))
         return new, None
 
     def run(state, ks):
@@ -808,8 +854,86 @@ def _sim_one(sc: ScenarioBatch, state0: SimState, data, seed,
     return run(state0, ticks), None
 
 
+def _sim_blocked(batch: ScenarioBatch, state0: SimState, data, seeds,
+                 tick0, program: ModelProgram, n_run: int, k_snap: int):
+    """Megabatched scan for ``ModelProgram(blocked=True)``: the tick scan
+    runs ONCE (outside any vmap); per tick the market logic is vmapped over
+    the (S, R) grid — bit-identical RNG streams to `_sim_one`, via the
+    shared `_market_tick` — and the blocked ``step_fn`` trains every
+    replica in one call over (S, R)-leading leaves. The whole-model
+    ``where`` gating pass is the step's own job (the fused update gates
+    per element), which is the point: no per-replica small ops anywhere in
+    the hot loop."""
+    s_dim, r_dim = state0.t.shape
+    j_max = batch.bid_table.shape[2]
+    assert_carry_dtypes(state0)
+    bases = jax.vmap(
+        lambda s: jax.random.fold_in(jax.random.PRNGKey(20), s))(seeds)
+    over_seeds = jax.vmap(_market_tick, in_axes=(None, 0, 0, 0, 0, 0, None))
+    market_grid = jax.vmap(over_seeds, in_axes=(0, None, None, 0, 0, 0,
+                                                None))
+    alpha2 = jnp.broadcast_to(batch.alpha[:, None], (s_dim, r_dim))
+    si = jnp.arange(s_dim)[:, None]
+    ri = jnp.arange(r_dim)[None, :]
+
+    def tick(state: SimState, k):
+        m = market_grid(batch, bases, seeds, state.t, state.j,
+                        state.bucket, k)
+        # blocked steps gate on `running` internally (element-for-element
+        # in the fused update) — no engine-side tree.map(where) pass
+        model, metric = program.step_fn(
+            state.model, data, m.k_grad, m.mask.astype(jnp.float32),
+            state.j, alpha2, m.running)
+
+        t_new = state.t + m.dt
+        cost_new = state.total_cost + m.cost_inc
+        idle_new = state.total_idle + m.idle_inc
+
+        idx = jnp.minimum(state.j, j_max - 1)
+
+        def put(traj, val):
+            return traj.at[si, ri, idx].set(
+                jnp.where(m.running, val, traj[si, ri, idx]))
+
+        new = SimState(
+            t=t_new, j=state.j + m.running.astype(jnp.int32),
+            bucket=m.bucket,
+            total_cost=cost_new, total_idle=idle_new, model=model,
+            err_traj=put(state.err_traj, metric),
+            cost_traj=put(state.cost_traj, cost_new),
+            time_traj=put(state.time_traj, t_new),
+            y_traj=put(state.y_traj, m.y))
+        return new, None
+
+    def run(state, ks):
+        state, _ = lax.scan(tick, state, ks)
+        return state
+
+    ticks = tick0 + jnp.arange(n_run, dtype=jnp.int32)
+    if k_snap and n_run >= k_snap:
+        n_chunks = n_run // k_snap
+        head = ticks[:n_chunks * k_snap].reshape(n_chunks, k_snap)
+
+        def chunk(state, ks):
+            state = run(state, ks)
+            return state, state
+
+        final, snaps = lax.scan(chunk, state0, head)
+        if n_run % k_snap:
+            final = run(final, ticks[n_chunks * k_snap:])
+        # scan stacks snapshots on axis 0; callers (snapshot_state) index
+        # them at axis 2, the (S, R, n_snap, ...) layout of `_sim_one`
+        snaps = jax.tree.map(lambda x: jnp.moveaxis(x, 0, 2), snaps)
+        return final, snaps
+    return run(state0, ticks), None
+
+
 def _vmapped_sim(batch: ScenarioBatch, state0, data, seeds, tick0,
                  program: ModelProgram, n_run: int, k_snap: int):
+    if program.blocked:
+        return _sim_blocked(batch, state0, data, seeds, tick0, program,
+                            n_run, k_snap)
+
     def one(sc, st, seed, t0):
         return _sim_one(sc, st, data, seed, program, n_run, k_snap, t0)
 

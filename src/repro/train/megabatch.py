@@ -1,0 +1,447 @@
+"""Megabatched elastic train step: the replica axis folded into blocked
+parameters and a widened batch dimension instead of an outer ``vmap``.
+
+The batched engine's default trainer path runs ``make_train_step`` under
+``vmap(vmap(...))`` over the (scenario × seed) grid — R small matmuls per
+layer op, autodiff-generated backward (including an XLA-CPU scatter for the
+embedding gradient that lowers to a serial loop), and a separate
+whole-model ``where`` gating pass per tick. This module restructures the
+hot path:
+
+* **Blocked flat parameters.** Every replica's parameters (and SGD momentum)
+  live in one flat ``(R, P)`` buffer (`pack_state` / `unpack_state`); each
+  layer op is ONE batched ``dot_general`` over all replicas, with the qkv
+  (+bias) and gate/up projections concatenated so the whole attention input
+  projection is a single dot.
+* **Hand-written backward.** The VJP of the full step is written out
+  (validated against autodiff), avoiding the autodiff artifacts that
+  dominate the vmapped step on CPU: the embedding-gather backward scatter
+  is replaced by a one-hot batched dot, rope applies q's ``1/√d`` scale
+  inside its precomputed cos/sin tables, and softmax/CE backwards reuse
+  forward residuals.
+* **Fused elastic update.** Gradients are computed in SUM form
+  (``Σ_tokens w·nll``), so Eq. (5)'s masked renormalization is a
+  per-replica scalar folded into the momentum apply — one fused pass over
+  the flat (R, P) blocks, gated on the tick actually running (idle /
+  finished / all-preempted replicas are exact no-ops on every element).
+  With ``use_fused_update`` the pass runs through the Pallas kernel
+  (`kernels.elastic_update`, interpret-mode on CPU CI, compiled on
+  GPU/TPU); otherwise the identical jnp expression is inlined.
+
+Scope: the dense decoder family (rms-norm → rope GQA attention → SiLU-GLU
+MLP), untied embeddings, SGD(+momentum), microbatch 1 — i.e. the reduced
+model-zoo configs the scan-native trainer sweeps. `supports_megabatch`
+reports the reason when a config falls outside this envelope, and
+``train_batched(megabatch="auto")`` falls back to the vmapped path.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Callable, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import JobConfig, ModelConfig
+from repro.optim.sgd import constant_lr
+
+NEG_INF = -1e30
+
+
+def supports_megabatch(cfg: ModelConfig, job: JobConfig) -> Optional[str]:
+    """None when the megabatch path reproduces this job's semantics, else
+    the reason it cannot (the caller falls back to the vmapped step)."""
+    if cfg.family != "dense":
+        return f"family {cfg.family!r} (dense only)"
+    if cfg.mla is not None or cfg.moe is not None:
+        return "mla/moe blocks"
+    if cfg.tie_embeddings:
+        return "tied embeddings"
+    if jnp.dtype(cfg.param_dtype) != jnp.float32:
+        return f"param dtype {cfg.param_dtype} (float32 only)"
+    if max(job.microbatch, 1) != 1:
+        return f"microbatch {job.microbatch} (grad accumulation)"
+    if job.optimizer != "sgd":
+        return f"optimizer {job.optimizer!r} (sgd only)"
+    return None
+
+
+# --------------------------------------------------------------------------
+# Flat (R, P) parameter layout
+# --------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class _Layout:
+    """Static description of the flat parameter block: per-leaf (name,
+    layer, shape, offset) slices in a fixed, documented order."""
+
+    names: Tuple[Tuple[str, int, Tuple[int, ...], int], ...]
+    size: int
+
+
+@functools.lru_cache(maxsize=64)
+def layout(cfg: ModelConfig) -> _Layout:
+    d, v, f = cfg.d_model, cfg.vocab_size, cfg.d_ff
+    hq, hkv = cfg.num_heads, cfg.num_kv_heads
+    dh = cfg.resolved_head_dim
+    nh = (hq + 2 * hkv) * dh
+    entries: List[Tuple[str, int, Tuple[int, ...]]] = [("embed", -1, (v, d))]
+    for l in range(cfg.num_layers):
+        entries.append(("ln1", l, (d,)))
+        entries.append(("wqkv", l, (d, nh)))
+        if cfg.qkv_bias:
+            entries.append(("bqkv", l, (nh,)))
+        entries.append(("wo", l, (hq * dh, d)))
+        entries.append(("ln2", l, (d,)))
+        entries.append(("w_gu", l, (d, 2 * f)))
+        entries.append(("w_down", l, (f, d)))
+    entries.append(("ln_f", -1, (d,)))
+    entries.append(("lm_head", -1, (d, v)))
+    names, off = [], 0
+    for name, l, shape in entries:
+        names.append((name, l, shape, off))
+        off += int(np.prod(shape))
+    return _Layout(names=tuple(names), size=off)
+
+
+def pack_state(params, opt_state, cfg: ModelConfig, momentum: float
+               ) -> Dict[str, jax.Array]:
+    """Standard (params, opt_state) pytrees -> {"p": (P,), "v": (P,)} flat
+    blocked state (leaves may carry arbitrary leading batch dims)."""
+
+    def flat_of(tree):
+        la, mlp = tree["layers"]["attn"], tree["layers"]["mlp"]
+        lead = tree["embed"].shape[:-2]
+        segs = [tree["embed"]]
+        for l in range(cfg.num_layers):
+            sl = (Ellipsis, l)
+            segs.append(tree["layers"]["ln1"][..., l, :])
+            segs.append(jnp.concatenate(
+                [la["wq"][..., l, :, :], la["wk"][..., l, :, :],
+                 la["wv"][..., l, :, :]], axis=-1))
+            if cfg.qkv_bias:
+                segs.append(jnp.concatenate(
+                    [la["bq"][..., l, :], la["bk"][..., l, :],
+                     la["bv"][..., l, :]], axis=-1))
+            segs.append(la["wo"][..., l, :, :])
+            segs.append(tree["layers"]["ln2"][..., l, :])
+            segs.append(jnp.concatenate(
+                [mlp["w_gate"][..., l, :, :], mlp["w_up"][..., l, :, :]],
+                axis=-1))
+            segs.append(mlp["w_down"][..., l, :, :])
+        segs.append(tree["ln_f"])
+        segs.append(tree["lm_head"])
+        return jnp.concatenate(
+            [s.reshape(lead + (-1,)) for s in segs], axis=-1)
+
+    p_flat = flat_of(params)
+    v_flat = (jnp.zeros_like(p_flat) if momentum == 0.0
+              else flat_of(opt_state))
+    return {"p": p_flat, "v": v_flat}
+
+
+def _slices(flat, cfg: ModelConfig):
+    """Flat (..., P) -> {(name, layer): (..., *shape)} leaf views."""
+    lay = layout(cfg)
+    lead = flat.shape[:-1]
+    out = {}
+    for name, l, shape, off in lay.names:
+        n = int(np.prod(shape))
+        out[(name, l)] = jax.lax.slice_in_dim(
+            flat, off, off + n, axis=flat.ndim - 1).reshape(lead + shape)
+    return out
+
+
+def unpack_state(model: Dict[str, jax.Array], cfg: ModelConfig,
+                 momentum: float):
+    """{"p", "v"} flat blocked state -> standard (params, opt_state)
+    pytrees with the model-zoo leaf names/shapes (arbitrary leading dims;
+    layer leaves re-stacked on their (L,) axis)."""
+
+    def tree_of(flat):
+        s = _slices(flat, cfg)
+        hq, hkv, dh = (cfg.num_heads, cfg.num_kv_heads,
+                       cfg.resolved_head_dim)
+
+        def stack(name):
+            return jnp.stack([s[(name, l)] for l in range(cfg.num_layers)],
+                             axis=flat.ndim - 1)
+
+        wqkv = stack("wqkv")
+        attn = {"wq": wqkv[..., :, :hq * dh],
+                "wk": wqkv[..., :, hq * dh:(hq + hkv) * dh],
+                "wv": wqkv[..., :, (hq + hkv) * dh:],
+                "wo": stack("wo")}
+        if cfg.qkv_bias:
+            bqkv = stack("bqkv")
+            attn.update(bq=bqkv[..., :hq * dh],
+                        bk=bqkv[..., hq * dh:(hq + hkv) * dh],
+                        bv=bqkv[..., (hq + hkv) * dh:])
+        w_gu = stack("w_gu")
+        return {
+            "embed": s[("embed", -1)],
+            "layers": {"ln1": stack("ln1"), "ln2": stack("ln2"),
+                       "attn": attn,
+                       "mlp": {"w_gate": w_gu[..., :, :cfg.d_ff],
+                               "w_up": w_gu[..., :, cfg.d_ff:],
+                               "w_down": stack("w_down")}},
+            "ln_f": s[("ln_f", -1)],
+            "lm_head": s[("lm_head", -1)],
+        }
+
+    params = tree_of(model["p"])
+    opt_state = () if momentum == 0.0 else tree_of(model["v"])
+    return params, opt_state
+
+
+# --------------------------------------------------------------------------
+# Blocked forward + hand-written backward
+# --------------------------------------------------------------------------
+
+
+def _bdot(x, w):
+    """(R,T,D) @ (R,D,H) -> (R,T,H), one batched dot over all replicas."""
+    return jax.lax.dot_general(x, w, (((2,), (1,)), ((0,), (0,))))
+
+
+def _bdot_dw(x, dy):
+    """dW = xᵀ dy per replica: contract the token axis."""
+    return jax.lax.dot_general(x, dy, (((1,), (1,)), ((0,), (0,))))
+
+
+def _bdot_dx(dy, w):
+    """dx = dy Wᵀ per replica: contract the feature axis."""
+    return jax.lax.dot_general(dy, w, (((2,), (2,)), ((0,), (0,))))
+
+
+@functools.lru_cache(maxsize=64)
+def _consts(cfg: ModelConfig, seq_len: int):
+    """Static per-(cfg, S) tables: rope cos/sin with q's 1/√d scale folded
+    into the q-head rows, and the additive causal(+window) mask."""
+    hq, hkv = cfg.num_heads, cfg.num_kv_heads
+    dh = cfg.resolved_head_dim
+    half = dh // 2
+    freqs = cfg.rope_theta ** (-np.arange(half, dtype=np.float32) / half)
+    ang = np.arange(seq_len, dtype=np.float32)[:, None] * freqs
+    cos, sin = np.cos(ang), np.sin(ang)                  # (S, half)
+    scale = np.array([dh ** -0.5] * hq + [1.0] * hkv, np.float32)
+    c_qk = (cos[None] * scale[:, None, None]).transpose(1, 0, 2)
+    s_qk = (sin[None] * scale[:, None, None]).transpose(1, 0, 2)
+    qpos = np.arange(seq_len)[:, None]
+    kpos = np.arange(seq_len)[None, :]
+    keep = kpos <= qpos
+    if cfg.sliding_window:
+        keep &= (qpos - kpos) < cfg.sliding_window
+    cmask = np.where(keep, 0.0, NEG_INF).astype(np.float32)
+    # numpy (not jnp) so the lru_cache never captures a tracer-scoped array
+    return c_qk[None, None].astype(np.float32), \
+        s_qk[None, None].astype(np.float32), cmask
+
+
+def _rope_qk(qk, c, s, half):
+    x1, x2 = qk[..., :half], qk[..., half:]
+    return jnp.concatenate([x1 * c - x2 * s, x2 * c + x1 * s], axis=-1)
+
+
+def _rope_qk_t(g, c, s, half):
+    g1, g2 = g[..., :half], g[..., half:]
+    return jnp.concatenate([g1 * c + g2 * s, g2 * c - g1 * s], axis=-1)
+
+
+def _rms_fwd(x, w, eps):
+    inv = jax.lax.rsqrt(jnp.mean(x * x, axis=-1, keepdims=True) + eps)
+    xh = x * inv
+    return xh * w[:, None, :], (xh, inv)
+
+
+def _rms_bwd(g, w, xh, inv):
+    gw = g * w[:, None, :]
+    return inv * (gw - xh * jnp.mean(gw * xh, axis=-1, keepdims=True))
+
+
+def _fwd_res(p, cfg: ModelConfig, onehot_tok, labels2, w2, dims):
+    """Blocked forward over all replicas at once, saving the residuals the
+    hand-written backward consumes. Returns (nll_r, w_r, res)."""
+    rt, b, s = dims
+    hq, hkv, dh = cfg.num_heads, cfg.num_kv_heads, cfg.resolved_head_dim
+    g, f, t = hq // hkv, cfg.d_ff, b * s
+    c_qk, s_qk, cmask = _consts(cfg, s)
+    half = dh // 2
+    eps = cfg.norm_eps
+
+    x = _bdot(onehot_tok, p[("embed", -1)])                    # (Rt,T,D)
+    layer_res = []
+    for l in range(cfg.num_layers):
+        h1, r1 = _rms_fwd(x, p[("ln1", l)], eps)
+        qkv = _bdot(h1, p[("wqkv", l)])
+        if cfg.qkv_bias:
+            qkv = qkv + p[("bqkv", l)][:, None, :]
+        qkv = qkv.reshape(rt, b, s, hq + 2 * hkv, dh)
+        qk = _rope_qk(qkv[..., :hq + hkv, :], c_qk, s_qk, half)
+        q = qk[..., :hq, :].reshape(rt, b, s, hkv, g, dh)
+        k = qk[..., hq:, :]                                    # (Rt,B,S,K,D)
+        v = qkv[..., hq + hkv:, :]
+        sc = (q[:, :, :, None] * k[:, :, None, :, :, None, :]).sum(-1)
+        sc = sc + cmask[None, None, :, :, None, None]          # (Rt,B,S,T,K,G)
+        e = jnp.exp(sc - sc.max(axis=3, keepdims=True))
+        att = e / e.sum(axis=3, keepdims=True)
+        o = (att[..., None] * v[:, :, None, :, :, None, :]).sum(3)
+        o = o.reshape(rt, t, hq * dh)
+        x1 = x + _bdot(o, p[("wo", l)])
+        h2, r2 = _rms_fwd(x1, p[("ln2", l)], eps)
+        gu = _bdot(h2, p[("w_gu", l)])
+        sg = jax.nn.sigmoid(gu[..., :f])
+        hh = gu[..., :f] * sg * gu[..., f:]
+        x2 = x1 + _bdot(hh, p[("w_down", l)])
+        layer_res.append((h1, r1, qk, q, k, v, att, o, h2, r2, hh, sg, gu))
+        x = x2
+    hf, rf = _rms_fwd(x, p[("ln_f", -1)], eps)
+    logits = _bdot(hf, p[("lm_head", -1)])
+    mx = logits.max(axis=-1)
+    e2 = jnp.exp(logits - mx[..., None])
+    se = e2.sum(-1)
+    lse = jnp.log(se) + mx
+    gold = jnp.take_along_axis(logits, labels2[..., None], axis=-1)[..., 0]
+    nll_r = ((lse - gold) * w2).sum(axis=1)
+    w_r = w2.sum(axis=1)
+    return nll_r, w_r, (layer_res, hf, rf, e2, se)
+
+
+def _bwd(p, cfg: ModelConfig, onehot_tok, labels2, w2, res, dims):
+    """Hand-written gradient of Σ_r nll_r wrt the blocked params (SUM form
+    — no per-replica normalization here; that is the fused update's job)."""
+    rt, b, s = dims
+    hq, hkv, dh = cfg.num_heads, cfg.num_kv_heads, cfg.resolved_head_dim
+    f, t, v_dim = cfg.d_ff, b * s, cfg.vocab_size
+    c_qk, s_qk, _ = _consts(cfg, s)
+    half = dh // 2
+    layer_res, hf, rf, e2, se = res
+    xhf, invf = rf
+    grads = {}
+    onehot_lab = jax.nn.one_hot(labels2, v_dim, dtype=jnp.float32)
+    dlogits = w2[..., None] * (e2 / se[..., None] - onehot_lab)
+    grads[("lm_head", -1)] = _bdot_dw(hf, dlogits)
+    dhf = _bdot_dx(dlogits, p[("lm_head", -1)])
+    grads[("ln_f", -1)] = (dhf * xhf).sum(axis=1)
+    dx = _rms_bwd(dhf, p[("ln_f", -1)], xhf, invf)
+    for l in reversed(range(cfg.num_layers)):
+        (h1, r1, qk, q, k, v, att, o, h2, r2, hh, sg, gu) = layer_res[l]
+        xh1, inv1 = r1
+        xh2, inv2 = r2
+        grads[("w_down", l)] = _bdot_dw(hh, dx)
+        dhh = _bdot_dx(dx, p[("w_down", l)])
+        gg, uu = gu[..., :f], gu[..., f:]
+        dg = dhh * uu * sg * (1 + gg * (1 - sg))
+        du = dhh * gg * sg
+        dgu = jnp.concatenate([dg, du], axis=-1)
+        grads[("w_gu", l)] = _bdot_dw(h2, dgu)
+        dh2 = _bdot_dx(dgu, p[("w_gu", l)])
+        grads[("ln2", l)] = (dh2 * xh2).sum(axis=1)
+        dx1 = dx + _rms_bwd(dh2, p[("ln2", l)], xh2, inv2)
+        grads[("wo", l)] = _bdot_dw(o, dx1)
+        do = _bdot_dx(dx1, p[("wo", l)]).reshape(
+            rt, b, s, hkv, hq // hkv, dh)
+        datt = (do[:, :, :, None] * v[:, :, None, :, :, None, :]).sum(-1)
+        dv = (att[..., None] * do[:, :, :, None]).sum(axis=(2, 5))
+        dot = (datt * att).sum(3, keepdims=True)
+        dsc = att * (datt - dot)
+        dq = (dsc[..., None] * k[:, :, None, :, :, None, :]).sum(3)
+        dk = (dsc[..., None] * q[:, :, :, None]).sum(axis=(2, 5))
+        dqk = _rope_qk_t(jnp.concatenate(
+            [dq.reshape(rt, b, s, hq, dh), dk], axis=3), c_qk, s_qk, half)
+        dqkv = jnp.concatenate([dqk, dv], axis=3).reshape(
+            rt, t, (hq + 2 * hkv) * dh)
+        if cfg.qkv_bias:
+            grads[("bqkv", l)] = dqkv.sum(axis=1)
+        grads[("wqkv", l)] = _bdot_dw(h1, dqkv)
+        dh1 = _bdot_dx(dqkv, p[("wqkv", l)])
+        grads[("ln1", l)] = (dh1 * xh1).sum(axis=1)
+        dx = dx1 + _rms_bwd(dh1, p[("ln1", l)], xh1, inv1)
+    grads[("embed", -1)] = jax.lax.dot_general(
+        onehot_tok, dx, (((1,), (1,)), ((0,), (0,))))
+    return grads
+
+
+def _flatten_grads(grads, cfg: ModelConfig, rt: int):
+    lay = layout(cfg)
+    return jnp.concatenate(
+        [grads[(name, l)].reshape(rt, -1) for name, l, _, _ in lay.names],
+        axis=1)
+
+
+# --------------------------------------------------------------------------
+# The megabatched step
+# --------------------------------------------------------------------------
+
+
+def make_megabatch_step(cfg: ModelConfig, job: JobConfig,
+                        lr_fn: Optional[Callable] = None,
+                        use_fused_update: bool = False,
+                        fused_interpret: Optional[bool] = None):
+    """Returns ``step(model, tokens, labels, masks, j, running,
+    label_mask=None) -> (new_model, loss)`` over the flat blocked state.
+
+    model: {"p": (R, P), "v": (R, P)}; tokens/labels (R, B, S) int32;
+    masks (R, n_workers) float; j (R,) int32; running (R,) bool. ``loss``
+    is the per-replica Eq.-(5) batch loss (0 where Σw = 0), identical to
+    the vmapped ``make_train_step`` metric. The returned state is gated on
+    ``running`` element-for-element, so the engine's whole-model ``where``
+    pass is unnecessary for this program.
+    """
+    reason = supports_megabatch(cfg, job)
+    if reason:
+        raise NotImplementedError(f"megabatch path unsupported: {reason}")
+    lr_fn = lr_fn or constant_lr(job.learning_rate)
+    mu = float(job.momentum)
+
+    def step(model, tokens, labels, masks, j, running, label_mask=None):
+        from repro.kernels import ops as kernel_ops
+
+        rt, b, s = tokens.shape
+        t = b * s
+        per = b // masks.shape[-1]
+        dims = (rt, b, s)
+        p = _slices(model["p"], cfg)
+        tok2 = tokens.reshape(rt, t)
+        onehot_tok = jax.nn.one_hot(tok2, cfg.vocab_size, dtype=jnp.float32)
+        w2 = jnp.repeat(masks.astype(jnp.float32), per, axis=-1,
+                        total_repeat_length=b)
+        w2 = jnp.broadcast_to(w2[:, :, None], (rt, b, s))
+        if label_mask is not None:
+            w2 = w2 * label_mask.astype(jnp.float32)
+        w2 = w2.reshape(rt, t)
+        labels2 = labels.reshape(rt, t)
+        nll_r, w_r, res = _fwd_res(p, cfg, onehot_tok, labels2, w2, dims)
+        grads = _bwd(p, cfg, onehot_tok, labels2, w2, res, dims)
+        gf = _flatten_grads(grads, cfg, rt)
+        lr = jnp.broadcast_to(lr_fn(j), (rt,)).astype(jnp.float32)
+        if use_fused_update:
+            p_new, v_new = kernel_ops.fused_elastic_update(
+                model["p"], model["v"], gf, w_r, running, lr, momentum=mu,
+                interpret=fused_interpret)
+        else:
+            # same fused expression inline (the kernel's jnp reference)
+            inv = jnp.where(w_r > 0,
+                            1.0 / jnp.maximum(w_r, 1e-6), 0.0)[:, None]
+            rr = running[:, None]
+            v_new = mu * model["v"] + gf * inv
+            p_new = model["p"] - lr[:, None] * v_new
+            p_new = jnp.where(rr, p_new, model["p"])
+            v_new = jnp.where(rr, v_new, model["v"])
+        loss = jnp.where(w_r > 0, nll_r / jnp.maximum(w_r, 1e-6), 0.0)
+        return {"p": p_new, "v": v_new}, loss
+
+    return step
+
+
+def init_megabatch_state(cfg: ModelConfig, job: JobConfig, key
+                         ) -> Dict[str, jax.Array]:
+    """The flat blocked {"p", "v"} state a fresh replica starts from —
+    bit-identical to packing ``train_step.init_train_state``."""
+    from repro.train.train_step import init_train_state
+
+    params, opt_state = init_train_state(cfg, job, key)
+    return pack_state(params, opt_state, cfg, float(job.momentum))

@@ -40,6 +40,7 @@ from repro.data.synthetic import lm_batch
 from repro.sim import engine
 from repro.sim.cluster import VolatileCluster
 from repro.train import checkpoint as ckpt_mod
+from repro.train import megabatch as megabatch_mod
 from repro.train.train_step import init_train_state, make_train_step
 
 
@@ -137,7 +138,9 @@ class ElasticTrainer:
                     n_ticks: Optional[int] = None,
                     n_batches: Optional[int] = None,
                     batch_fn: Optional[Callable[[int], Dict]] = None,
-                    snapshot_every: int = 0):
+                    snapshot_every: int = 0,
+                    megabatch: bool = False,
+                    use_fused_update: bool = False):
         """Scan-native training: the trainer's market/runtime plus a grid of
         strategies (default: its own) × seeds, every configuration training
         a real model end-to-end in one compiled call.
@@ -165,7 +168,8 @@ class ElasticTrainer:
         res = train_batched(
             self.job, scenarios, seeds, n_ticks=n_ticks,
             n_batches=n_batches, batch_fn=batch_fn, batch_seed=self.seed,
-            snapshot_every=snapshot_every)
+            snapshot_every=snapshot_every, megabatch=megabatch,
+            use_fused_update=use_fused_update)
         if self.checkpoint_path and res.snapshots is not None:
             save_batched(self.checkpoint_path, res)
         return BatchResult(names=[s.name for s in scenarios], result=res)
@@ -262,6 +266,62 @@ def make_train_program(job: JobConfig, n_batches: int) -> engine.ModelProgram:
                                name=f"train-{job.model.name}-{n_batches}")
 
 
+@functools.lru_cache(maxsize=32)
+def make_megabatch_train_program(job: JobConfig, n_batches: int,
+                                 use_fused_update: bool = False
+                                 ) -> engine.ModelProgram:
+    """The megabatched elastic train step as a *blocked* engine program.
+
+    model = ``train.megabatch``'s flat replica-blocked state ({"p", "v"}
+    (S, R, P) buffers); per tick the whole (S, R) grid trains in ONE step
+    call — each replica's batch gathered by its own ``j % n_batches``, the
+    grid flattened to a single widened replica axis, and Eq. (5)'s
+    renormalization + the gated SGD apply fused over the flat blocks
+    (through the Pallas kernel when ``use_fused_update``). Semantically
+    identical to `make_train_program` (see tests/test_megabatch.py);
+    raises NotImplementedError for configs outside the megabatch envelope
+    (`megabatch.supports_megabatch` names the reason).
+    """
+    cfg = job.model
+    reason = megabatch_mod.supports_megabatch(cfg, job)
+    if reason:
+        raise NotImplementedError(f"megabatch path unsupported: {reason}")
+    step = megabatch_mod.make_megabatch_step(
+        cfg, job, use_fused_update=use_fused_update)
+
+    def step_fn(model, data, key, mask, j, alpha, running):
+        del key, alpha
+        s, r = j.shape
+        rt = s * r
+        b = j % n_batches
+        tokens = data["tokens"][b].reshape((rt,) + data["tokens"].shape[1:])
+        labels = data["labels"][b].reshape((rt,) + data["labels"].shape[1:])
+        label_mask = data.get("label_mask")
+        if label_mask is not None:
+            label_mask = label_mask[b].reshape(
+                (rt,) + label_mask.shape[1:])
+        flat = jax.tree.map(
+            lambda x: x.reshape((rt,) + x.shape[2:]), model)
+        new, loss = step(flat, tokens, labels, mask.reshape(rt, -1),
+                         j.reshape(rt), running.reshape(rt), label_mask)
+        new = jax.tree.map(
+            lambda x: x.reshape((s, r) + x.shape[1:]), new)
+        return new, loss.reshape(s, r)
+
+    name = f"train-mega-{job.model.name}-{n_batches}"
+    if use_fused_update:
+        name += "-fused"
+    return engine.ModelProgram(step_fn=step_fn, name=name, blocked=True)
+
+
+def unpack_batched_model(final_model, job: JobConfig):
+    """A megabatched run's ``EngineResult.final_model`` ({"p", "v"} flat
+    (S, R, P) buffers) back to the standard (params, opt_state) pytrees
+    with (S, R, ...) leading axes — the layout the vmapped path returns."""
+    return megabatch_mod.unpack_state(final_model, job.model,
+                                      float(job.momentum))
+
+
 def stack_batches(job: JobConfig, n_batches: int, seed: int = 0,
                   batch_fn: Optional[Callable[[int], Dict]] = None):
     """Device-stack the first ``n_batches`` training batches on a leading
@@ -286,7 +346,9 @@ def train_batched(job: JobConfig,
                   donate: bool = True,
                   snapshot_every: int = 0,
                   init_state: Optional[engine.SimState] = None,
-                  tick0: int = 0) -> engine.EngineResult:
+                  tick0: int = 0,
+                  megabatch: bool = False,
+                  use_fused_update: bool = False) -> engine.EngineResult:
     """Train a real model under every scenario × seed in one compiled call.
 
     Folds the elastic masked train step into the batched engine: the whole
@@ -310,12 +372,28 @@ def train_batched(job: JobConfig,
     per-tick stochastic draws are shaped by the *batch-global* padded
     worker width, so a (scenario, seed) cell is bit-reproducible within
     the same stacked grid — not across grids padded to different widths.
+
+    ``megabatch=True`` selects the replica-blocked layout (see
+    `train.megabatch`): the same market draws and update semantics with
+    the replica axis folded into blocked parameters and a widened batch
+    dimension — market trajectories stay bit-exact, losses/params agree
+    to float tolerance (test_megabatch pins both). ``final_model`` then
+    holds the flat {"p", "v"} buffers; `unpack_batched_model` converts
+    back. ``use_fused_update`` additionally routes the elastic SGD apply
+    through the fused Pallas kernel (`kernels.ops.fused_elastic_update`).
     """
     scenarios, program, data, n_ticks = _prepare_batched(
         job, scenarios, n_ticks=n_ticks, n_batches=n_batches,
-        batch_fn=batch_fn, batch_seed=batch_seed)
-    model0 = None if init_state is not None else init_train_state(
-        job.model, job, jax.random.PRNGKey(job.seed))
+        batch_fn=batch_fn, batch_seed=batch_seed, megabatch=megabatch,
+        use_fused_update=use_fused_update)
+    if init_state is not None:
+        model0 = None
+    elif megabatch:
+        model0 = megabatch_mod.init_megabatch_state(
+            job.model, job, jax.random.PRNGKey(job.seed))
+    else:
+        model0 = init_train_state(job.model, job,
+                                  jax.random.PRNGKey(job.seed))
     cfg = engine.SimConfig(n_ticks=n_ticks, snapshot_every=snapshot_every)
     return engine.simulate_program(scenarios, program, model0, data, seeds,
                                    cfg, donate=donate,
@@ -323,7 +401,8 @@ def train_batched(job: JobConfig,
 
 
 def _prepare_batched(job: JobConfig, scenarios, *, n_ticks, n_batches,
-                     batch_fn, batch_seed):
+                     batch_fn, batch_seed, megabatch: bool = False,
+                     use_fused_update: bool = False):
     """Shared setup of the scan-native training paths (`train_batched` and
     `train_batched_durable` must stay bit-exact equivalents): stack +
     fleet-width check, batch stream, program, tick-budget default."""
@@ -337,19 +416,31 @@ def _prepare_batched(job: JobConfig, scenarios, *, n_ticks, n_batches,
     j_max = scenarios.j_max
     n_batches = n_batches or j_max
     data = stack_batches(job, n_batches, seed=batch_seed, batch_fn=batch_fn)
-    program = make_train_program(job, n_batches)
+    if megabatch:
+        program = make_megabatch_train_program(job, n_batches,
+                                               use_fused_update)
+    else:
+        program = make_train_program(job, n_batches)
     return scenarios, program, data, n_ticks or 2 * j_max + 16
 
 
 def batched_init_state(job: JobConfig,
                        scenarios: Union[engine.ScenarioBatch,
                                         Sequence[engine.Scenario]],
-                       seeds: Union[int, Sequence[int]]) -> engine.SimState:
+                       seeds: Union[int, Sequence[int]],
+                       megabatch: bool = False) -> engine.SimState:
     """The (S, R) initial carry a batched training run starts from — and
     therefore the *restore template* for `checkpoint.restore` (same model
-    init ``PRNGKey(job.seed)``, same trajectory shapes)."""
+    init ``PRNGKey(job.seed)``, same trajectory shapes). ``megabatch``
+    must match the run being restored: the flat replica-blocked carry and
+    the (params, opt_state) tree are different pytrees."""
     n_seeds = int(seeds) if np.isscalar(seeds) else len(seeds)
-    model0 = init_train_state(job.model, job, jax.random.PRNGKey(job.seed))
+    if megabatch:
+        model0 = megabatch_mod.init_megabatch_state(
+            job.model, job, jax.random.PRNGKey(job.seed))
+    else:
+        model0 = init_train_state(job.model, job,
+                                  jax.random.PRNGKey(job.seed))
     return engine.initial_state(scenarios, model0, n_seeds)
 
 
@@ -366,12 +457,14 @@ def save_batched(path: str, result: engine.EngineResult,
 def restore_batched(path: str, job: JobConfig,
                     scenarios: Union[engine.ScenarioBatch,
                                      Sequence[engine.Scenario]],
-                    seeds: Union[int, Sequence[int]]):
+                    seeds: Union[int, Sequence[int]],
+                    megabatch: bool = False):
     """Load a `save_batched` checkpoint back into a batched carry. Returns
     ``(state, tick)`` for ``train_batched(init_state=state, tick0=tick)``;
     raises a key-naming ValueError if the job/scenario grid drifted from
-    the one that was checkpointed."""
-    like = batched_init_state(job, scenarios, seeds)
+    the one that was checkpointed. Pass ``megabatch=True`` for checkpoints
+    written by a megabatched run (flat replica-blocked carry)."""
+    like = batched_init_state(job, scenarios, seeds, megabatch=megabatch)
     return ckpt_mod.restore(path, like)
 
 

@@ -45,6 +45,21 @@ def test_weighted_mean_all_preempted_is_exact_zero():
     np.testing.assert_array_equal(np.asarray(g_w), 0.0)
 
 
+def test_weighted_mean_tiny_nonzero_weights_are_exact():
+    """Regression: a tiny-but-nonzero Σw (fractional weights — importance
+    scaling, soft masks) must yield the exact Σw·v/Σw, not a silently
+    ε-clamped value. With the old max(Σw, 1e-9) denominator, Σw = 1e-12
+    shrank the mean by 1e-3×."""
+    v = jnp.array([2.0, 4.0])
+    for w_tiny in (1e-12, 1e-9, 1e-6):
+        w = jnp.array([w_tiny, 0.0], jnp.float32)
+        got = float(weighted_mean(v, w))
+        assert got == pytest.approx(2.0, rel=1e-6), w_tiny
+    # fractional weights at ordinary scale: exact weighted average
+    w = jnp.array([0.25, 0.75], jnp.float32)
+    assert float(weighted_mean(v, w)) == pytest.approx(3.5, rel=1e-6)
+
+
 @pytest.mark.parametrize("arch", ["deepseek-7b", "qwen2-moe-a2.7b"])
 def test_masked_step_equals_subbatch_step(arch):
     """Gradient with mask == gradient computed on only the active workers'

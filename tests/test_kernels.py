@@ -119,3 +119,141 @@ def test_ssd_kernel_bf16_activations():
     np.testing.assert_allclose(np.asarray(y, np.float32),
                                np.asarray(yr, np.float32), atol=5e-2,
                                rtol=5e-2)
+
+
+# ------------------------------------------------------------ fused update
+
+
+def _update_inputs(r, p, seed=7):
+    k = jax.random.fold_in(KEY, seed)
+    params = jax.random.normal(k, (r, p), jnp.float32)
+    mom = jax.random.normal(jax.random.fold_in(k, 1), (r, p), jnp.float32)
+    grads = jax.random.normal(jax.random.fold_in(k, 2), (r, p), jnp.float32)
+    w = jax.random.uniform(jax.random.fold_in(k, 3), (r,), minval=0.0,
+                           maxval=4.0)
+    running = jax.random.bernoulli(jax.random.fold_in(k, 4), 0.7, (r,))
+    lr = jnp.full((r,), 0.1, jnp.float32)
+    return params, mom, grads, w, running, lr
+
+
+@pytest.mark.parametrize("r,p,blk", [
+    (4, 4432, 512),              # a trainer-bench-sized flat layout
+    (3, 517, 128),               # P not a block multiple (padding path)
+    (1, 64, 512),                # single replica, block > P
+    (8, 1024, 256),
+])
+def test_elastic_update_kernel_matches_reference(r, p, blk):
+    from repro.kernels.elastic_update import elastic_sgd_update
+
+    params, mom, grads, w, running, lr = _update_inputs(r, p)
+    # exercise the edge rows the engine produces: all-preempted (Σw = 0)
+    # and a not-running (idle/finished) replica
+    w = w.at[0].set(0.0)
+    running = running.at[-1].set(False)
+    kp, kv = elastic_sgd_update(params, mom, grads, w, running, lr,
+                                momentum=0.9, block_p=blk, interpret=True)
+    rp, rv = ref.elastic_update_reference(params, mom, grads, w, running,
+                                          lr, momentum=0.9)
+    np.testing.assert_allclose(np.asarray(kp), np.asarray(rp), atol=1e-6,
+                               rtol=1e-6)
+    np.testing.assert_allclose(np.asarray(kv), np.asarray(rv), atol=1e-6,
+                               rtol=1e-6)
+
+
+def test_elastic_update_semantics():
+    """The reference itself: Σw = 0 rows keep params and decay momentum;
+    running=False rows are exact no-ops; active rows apply momentum SGD on
+    the renormalized mean gradient."""
+    params = jnp.ones((3, 4))
+    mom = jnp.full((3, 4), 0.5)
+    grads = jnp.full((3, 4), 2.0)          # SUM-form gradient
+    w = jnp.asarray([0.0, 2.0, 2.0])
+    running = jnp.asarray([True, True, False])
+    lr = jnp.full((3,), 0.1)
+    p2, v2 = ref.elastic_update_reference(params, mom, grads, w, running,
+                                          lr, momentum=0.9)
+    # row 0: Σw = 0 → ḡ exactly 0, v' = μv, p' = p − lr·μv
+    np.testing.assert_allclose(np.asarray(v2[0]), 0.45, rtol=1e-6)
+    np.testing.assert_allclose(np.asarray(p2[0]), 1.0 - 0.1 * 0.45,
+                               rtol=1e-6)
+    # row 1: ḡ = 2/2 = 1, v' = 0.45 + 1, p' = 1 − 0.1·1.45
+    np.testing.assert_allclose(np.asarray(v2[1]), 1.45, rtol=1e-6)
+    np.testing.assert_allclose(np.asarray(p2[1]), 1.0 - 0.145, rtol=1e-6)
+    # row 2: not running → untouched
+    np.testing.assert_allclose(np.asarray(p2[2]), 1.0)
+    np.testing.assert_allclose(np.asarray(v2[2]), 0.5)
+
+
+def test_fused_elastic_update_cpu_policy():
+    """ops.fused_elastic_update with interpret=None on a CPU host runs the
+    jnp reference (full speed); explicit interpret=True runs the Pallas
+    kernel in interpret mode. Both agree with the oracle."""
+    params, mom, grads, w, running, lr = _update_inputs(4, 300, seed=9)
+    rp, rv = ref.elastic_update_reference(params, mom, grads, w, running,
+                                          lr, momentum=0.9)
+    for interpret in (None, True) if jax.default_backend() == "cpu" \
+            else (None,):
+        kp, kv = ops.fused_elastic_update(params, mom, grads, w, running,
+                                          lr, momentum=0.9,
+                                          interpret=interpret)
+        np.testing.assert_allclose(np.asarray(kp), np.asarray(rp),
+                                   atol=1e-6, rtol=1e-6)
+        np.testing.assert_allclose(np.asarray(kv), np.asarray(rv),
+                                   atol=1e-6, rtol=1e-6)
+
+
+@pytest.mark.skipif(jax.default_backend() == "cpu",
+                    reason="compiled-mode kernel needs a GPU/TPU backend")
+def test_elastic_update_kernel_compiled():
+    from repro.kernels.elastic_update import elastic_sgd_update
+
+    params, mom, grads, w, running, lr = _update_inputs(8, 4432, seed=11)
+    w = w.at[0].set(0.0)
+    kp, kv = elastic_sgd_update(params, mom, grads, w, running, lr,
+                                momentum=0.9, interpret=False)
+    rp, rv = ref.elastic_update_reference(params, mom, grads, w, running,
+                                          lr, momentum=0.9)
+    np.testing.assert_allclose(np.asarray(kp), np.asarray(rp), atol=1e-6,
+                               rtol=1e-6)
+    np.testing.assert_allclose(np.asarray(kv), np.asarray(rv), atol=1e-6,
+                               rtol=1e-6)
+
+
+# ------------------------------------------------------- interpret policy
+
+
+def test_auto_interpret_defaults_to_backend():
+    from repro.kernels import auto_interpret
+
+    on_cpu = jax.default_backend() == "cpu"
+    assert auto_interpret(None) is on_cpu
+    assert auto_interpret(True) is True
+    assert auto_interpret(False) is False
+
+
+def test_kernels_run_without_explicit_interpret():
+    """The CPU auto-interpret fallback: calling the public ops with
+    interpret unset must execute the real kernel code path (not raise /
+    not silently require a GPU) on every backend."""
+    q, k, v = _mha_inputs(1, 64, 64, 2, 2, 32, jnp.float32)
+    out = ops.flash_mha(q, k, v, causal=True)
+    r = ref.mha_reference(q.transpose(0, 2, 1, 3), k.transpose(0, 2, 1, 3),
+                          v.transpose(0, 2, 1, 3),
+                          causal=True).transpose(0, 2, 1, 3)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(r), atol=2e-5,
+                               rtol=2e-5)
+
+    xh, dt, a_h, bm, cm = _ssd_inputs(1, 128, 2, 32, 1, 32)
+    y, hfin = ops.ssd_chunked_pallas(xh, dt, a_h, bm, cm, chunk=64)
+    yr, hr = ref.ssd_reference(xh, dt, a_h, bm, cm)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(yr), atol=5e-4,
+                               rtol=5e-4)
+
+    from repro.kernels.elastic_update import elastic_sgd_update
+    params, mom, grads, w, running, lr = _update_inputs(2, 200, seed=13)
+    kp, kv = elastic_sgd_update(params, mom, grads, w, running, lr,
+                                momentum=0.9)
+    rp, rv = ref.elastic_update_reference(params, mom, grads, w, running,
+                                          lr, momentum=0.9)
+    np.testing.assert_allclose(np.asarray(kp), np.asarray(rp), atol=1e-6,
+                               rtol=1e-6)

@@ -1,0 +1,261 @@
+"""Megabatched trainer parity: the replica-blocked step (train.megabatch)
+against the vmapped elastic train step and the legacy per-replica loop —
+same Eq.-(5) semantics in three layouts — plus the engine-level pin that
+``train_batched(megabatch=True)`` reproduces the vmapped path's market
+trajectories bit-exactly."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCHS
+from repro.configs.base import InputShape, JobConfig
+from repro.train import megabatch as mb
+from repro.train.train_step import init_train_state, make_train_step
+
+# float tolerance for one step of the blocked layout vs the vmapped step:
+# identical math, different reduction orders (batched dots vs per-replica)
+RTOL, ATOL = 5e-4, 1e-5
+
+
+def _job(num_layers=2, momentum=0.9):
+    cfg = ARCHS["qwen2-7b"].reduced().with_(
+        num_layers=num_layers, d_model=16, num_heads=2, num_kv_heads=1,
+        d_ff=32, vocab_size=64, head_dim=8)
+    return cfg, JobConfig(model=cfg, shape=InputShape("t", 8, 4, "train"),
+                          n_workers=4, learning_rate=0.1,
+                          momentum=momentum)
+
+
+def _grid(cfg, job, r, seed=1):
+    """Random replica states + batches + masks, including the edge rows
+    every engine tick can produce: an all-preempted (Σw = 0) replica, a
+    fractional-weight replica, and a not-running replica."""
+    b, s = job.shape.global_batch, job.shape.seq_len
+    rng = np.random.default_rng(seed)
+    params, opt = init_train_state(cfg, job, jax.random.PRNGKey(0))
+    flat0 = mb.pack_state(params, opt, cfg, job.momentum)
+    p_dim = flat0["p"].shape[0]
+    flat = {
+        "p": jnp.tile(flat0["p"][None], (r, 1)) + 0.01 * jnp.asarray(
+            rng.standard_normal((r, p_dim)), jnp.float32),
+        "v": 0.01 * jnp.asarray(rng.standard_normal((r, p_dim)),
+                                jnp.float32),
+    }
+    if job.momentum == 0.0:
+        flat["v"] = jnp.zeros_like(flat["v"])
+    tokens = jnp.asarray(rng.integers(0, cfg.vocab_size, (r, b, s)),
+                         jnp.int32)
+    labels = jnp.asarray(rng.integers(0, cfg.vocab_size, (r, b, s)),
+                         jnp.int32)
+    masks = jnp.asarray(rng.integers(0, 2, (r, job.n_workers)),
+                        jnp.float32)
+    masks = masks.at[0].set(0.0)                       # Σw = 0 tick
+    masks = masks.at[1].set(
+        jnp.asarray([0.5, 0.25, 0.0, 1.0], jnp.float32))  # fractional
+    running = jnp.ones((r,), bool).at[2].set(False)
+    j = jnp.asarray(rng.integers(0, 10, (r,)), jnp.int32)
+    return flat, tokens, labels, masks, running, j
+
+
+def _gate(tree_new, tree_old, running):
+    return jax.tree.map(
+        lambda n, o: jnp.where(
+            running.reshape((len(running),) + (1,) * (n.ndim - 1)), n, o),
+        tree_new, tree_old)
+
+
+@pytest.mark.parametrize("num_layers,momentum,fused", [
+    (1, 0.9, False),
+    (2, 0.9, False),
+    (2, 0.9, True),
+    (1, 0.0, False),             # momentum-free SGD (opt_state = ())
+])
+def test_megabatch_step_matches_vmapped_and_loop(num_layers, momentum,
+                                                 fused):
+    cfg, job = _job(num_layers=num_layers, momentum=momentum)
+    assert mb.supports_megabatch(cfg, job) is None
+    r = 8
+    flat, tokens, labels, masks, running, j = _grid(cfg, job, r)
+
+    step = jax.jit(mb.make_megabatch_step(cfg, job,
+                                          use_fused_update=fused))
+    new, loss = step(flat, tokens, labels, masks, j, running)
+
+    # reference 1: the vmapped per-replica train step, engine-gated
+    ts = make_train_step(cfg, job, remat="none")
+
+    def cell(p, o, tok, lab, m, jj):
+        np_, no, met = ts(p, o, {"tokens": tok, "labels": lab}, m, jj)
+        return np_, no, met["loss"]
+
+    p_tree, o_tree = mb.unpack_state(flat, cfg, job.momentum)
+    vp, vo, vloss = jax.jit(jax.vmap(cell))(p_tree, o_tree, tokens,
+                                            labels, masks, j)
+    vp = _gate(vp, p_tree, running)
+    vo = _gate(vo, o_tree, running)
+
+    mp, mo = mb.unpack_state(new, cfg, job.momentum)
+    for a, b in zip(jax.tree.leaves(mp), jax.tree.leaves(vp)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=RTOL, atol=ATOL)
+    for a, b in zip(jax.tree.leaves(mo), jax.tree.leaves(vo)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=RTOL, atol=ATOL)
+    np.testing.assert_allclose(
+        np.asarray(jnp.where(running, loss, 0.0)),
+        np.asarray(jnp.where(running, vloss, 0.0)), rtol=RTOL, atol=ATOL)
+
+    # reference 2: the legacy per-replica Python loop over the same step
+    for i in [0, 1, 3]:          # Σw=0, fractional, and a normal replica
+        pi = jax.tree.map(lambda x: x[i], p_tree)
+        oi = jax.tree.map(lambda x: x[i], o_tree)
+        assert bool(running[i])  # gating already covered by reference 1
+        lp, lo, lmet = ts(pi, oi,
+                          {"tokens": tokens[i], "labels": labels[i]},
+                          masks[i], j[i])
+        for a, b in zip(jax.tree.leaves(jax.tree.map(lambda x: x[i], mp)),
+                        jax.tree.leaves(lp)):
+            np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                       rtol=RTOL, atol=ATOL)
+
+
+def test_megabatch_all_preempted_is_noop_on_params():
+    """Σw = 0 with the tick running: grads are exactly zero, so params
+    move only by the momentum decay term — identically to the vmapped
+    step's where(w_sum > 0, ..., 0) gradient."""
+    cfg, job = _job(num_layers=1)
+    r = 4
+    flat, tokens, labels, masks, running, j = _grid(cfg, job, r)
+    masks = jnp.zeros_like(masks)            # every replica all-preempted
+    running = jnp.ones((r,), bool)
+    step = jax.jit(mb.make_megabatch_step(cfg, job))
+    new, loss = step(flat, tokens, labels, masks, j, running)
+    # v' = μv exactly, p' = p − lr·μv exactly; loss exactly 0
+    np.testing.assert_array_equal(np.asarray(loss), 0.0)
+    np.testing.assert_allclose(np.asarray(new["v"]),
+                               np.asarray(0.9 * flat["v"]), rtol=1e-6)
+    np.testing.assert_allclose(
+        np.asarray(new["p"]),
+        np.asarray(flat["p"] - 0.1 * 0.9 * flat["v"]), rtol=1e-6,
+        atol=1e-7)
+
+
+def test_pack_unpack_roundtrip_exact():
+    cfg, job = _job(num_layers=3)
+    params, opt = init_train_state(cfg, job, jax.random.PRNGKey(2))
+    flat = mb.pack_state(params, opt, cfg, job.momentum)
+    p2, o2 = mb.unpack_state(flat, cfg, job.momentum)
+    for a, b in zip(jax.tree.leaves(params), jax.tree.leaves(p2)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    for a, b in zip(jax.tree.leaves(opt), jax.tree.leaves(o2)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    assert flat["p"].shape == (mb.layout(cfg).size,)
+
+
+def test_supports_megabatch_names_the_reason():
+    import dataclasses
+
+    cfg, job = _job()
+    assert mb.supports_megabatch(cfg, job) is None
+    assert "optimizer" in mb.supports_megabatch(
+        cfg, dataclasses.replace(job, optimizer="adam"))
+    assert "microbatch" in mb.supports_megabatch(
+        cfg, dataclasses.replace(job, microbatch=2))
+    bf16 = cfg.with_(param_dtype="bfloat16")
+    assert "dtype" in mb.supports_megabatch(bf16, job)
+    tied = cfg.with_(tie_embeddings=True)
+    assert "tied" in mb.supports_megabatch(tied, job)
+
+
+# ------------------------------------------------------- engine parity
+
+
+def _engine_setup(J=6, n_levels=2, n_seeds=2):
+    from repro.core import bidding, strategies as strat
+    from repro.core.cost_model import RuntimeModel, UniformPrice
+    from repro.sim import engine
+
+    cfg, job = _job(num_layers=1)
+    dist = UniformPrice(0.2, 1.0)
+    rt = RuntimeModel(kind="exp", lam=2.0, delta=0.05)
+    n_w = job.n_workers
+
+    def fixed(b):
+        return strat.FixedBids(bidding.BidPlan(
+            n=n_w, n1=n_w, b1=float(b), b2=float(b), J=J, expected_cost=0,
+            expected_time=0, expected_error=0), name=f"b{b:.2f}")
+
+    levels = np.linspace(0.75, 1.0, n_levels)
+    scenarios = [engine.scenario_from_strategy(
+        fixed(b), alpha=job.learning_rate, rt=rt, dist=dist, n_max=n_w,
+        name=f"b{b:.2f}") for b in levels]
+    return cfg, job, scenarios, J, n_seeds
+
+
+def test_train_batched_megabatch_matches_vmapped_engine():
+    from repro.train.trainer import train_batched, unpack_batched_model
+
+    cfg, job, scenarios, J, n_seeds = _engine_setup()
+    n_ticks = 2 * J + 4
+    r1 = train_batched(job, scenarios, n_seeds, n_ticks=n_ticks,
+                       donate=False)
+    r2 = train_batched(job, scenarios, n_seeds, n_ticks=n_ticks,
+                       donate=False, megabatch=True)
+
+    # market/accounting trajectories: bit-exact (shared _market_tick RNG)
+    np.testing.assert_array_equal(r1.iterations, r2.iterations)
+    np.testing.assert_array_equal(r1.total_time, r2.total_time)
+    np.testing.assert_array_equal(r1.total_cost, r2.total_cost)
+    np.testing.assert_array_equal(r1.ys, r2.ys)
+    np.testing.assert_array_equal(np.isnan(r1.errors), np.isnan(r2.errors))
+    # losses and final replica states: float tolerance
+    np.testing.assert_allclose(np.nan_to_num(r1.errors),
+                               np.nan_to_num(r2.errors), rtol=RTOL,
+                               atol=ATOL)
+    p1, o1 = r1.final_model
+    p2, o2 = unpack_batched_model(r2.final_model, job)
+    for a, b in zip(jax.tree.leaves(p1), jax.tree.leaves(p2)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=RTOL, atol=ATOL)
+
+
+def test_train_batched_megabatch_fused_is_bit_exact_with_inline():
+    """use_fused_update routes through kernels.ops.fused_elastic_update;
+    on this backend the policy resolves to the same fused expression, so
+    the whole run must be bit-identical to the inline megabatch update."""
+    from repro.train.trainer import train_batched
+
+    cfg, job, scenarios, J, n_seeds = _engine_setup()
+    n_ticks = 2 * J + 4
+    r2 = train_batched(job, scenarios, n_seeds, n_ticks=n_ticks,
+                       donate=False, megabatch=True)
+    r3 = train_batched(job, scenarios, n_seeds, n_ticks=n_ticks,
+                       donate=False, megabatch=True, use_fused_update=True)
+    for a, b in zip(jax.tree.leaves(r2.final_model),
+                    jax.tree.leaves(r3.final_model)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    np.testing.assert_array_equal(np.nan_to_num(r2.errors),
+                                  np.nan_to_num(r3.errors))
+
+
+def test_train_batched_megabatch_snapshot_resume():
+    """Scan-native checkpointing works on the blocked layout too: a run
+    resumed from its mid-run snapshot finishes bit-exactly."""
+    from repro.train.trainer import train_batched
+    from repro.sim import engine
+
+    cfg, job, scenarios, J, n_seeds = _engine_setup()
+    n_ticks = 2 * J + 4
+    snap_k = n_ticks // 2
+    full = train_batched(job, scenarios, n_seeds, n_ticks=n_ticks,
+                         donate=False, megabatch=True,
+                         snapshot_every=snap_k)
+    state, tick = engine.snapshot_state(full, 0)
+    resumed = train_batched(job, scenarios, n_seeds, n_ticks=n_ticks,
+                            donate=False, megabatch=True,
+                            init_state=state, tick0=tick)
+    for a, b in zip(jax.tree.leaves(full.final_model),
+                    jax.tree.leaves(resumed.final_model)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    np.testing.assert_array_equal(full.total_cost, resumed.total_cost)
