@@ -13,6 +13,9 @@ and step-microbenchmarks. Prints ``name,us_per_call,derived`` CSV rows.
   trainer — scan-native trainer (train_batched: real reduced transformer
           inside the engine jit) vs the legacy per-strategy ElasticTrainer
           Python loop on an 8-strategy × 8-seed grid.
+  sharded — engine ticks/sec under `simulate_sharded` at 1/2/4/8 forced
+          host devices (subprocess per count; cell-ticks/sec + speedup
+          vs 1 device).
   multibid — K=1..5 bid levels (core.multibid.optimize_multibid) on the
           engine: expected vs simulated cost curve (beyond-paper §VII).
   roofline — per (arch × shape) dominant roofline term from the dry-run
@@ -706,6 +709,100 @@ def bench_kernels():
              "interpret-mode-CPU" if "interpret" in name else "jnp-oracle")
 
 
+# --------------------------------------------------------------------------
+# sharded engine scaling across virtual devices
+# --------------------------------------------------------------------------
+
+_SHARDED_BENCH_SCRIPT = r"""
+import os, sys
+os.environ["XLA_FLAGS"] = ("--xla_force_host_platform_device_count="
+                           + sys.argv[1])
+import json, time
+import numpy as np
+import jax
+from repro.data.synthetic import QuadraticProblem
+from repro.launch.mesh import make_scenario_mesh
+from repro.sim import engine
+
+n_dev = int(sys.argv[1])
+S, R, n_ticks = (int(x) for x in sys.argv[2:5])
+if jax.device_count() < n_dev:
+    print("RESULT " + json.dumps({"skip": jax.device_count()}))
+    raise SystemExit(0)
+quad = QuadraticProblem(dim=16, n_samples=256, cond=5.0, noise=0.2, seed=0)
+w0 = np.asarray(quad.w_star + 1.0, np.float32)
+scenarios = [engine.Scenario(
+    price=engine.PriceSpec.uniform(0.2, 1.0), alpha=0.4 / quad.L,
+    bid_schedule=np.tile([b, b, b, b], (max(2, n_ticks // 2), 1)),
+    rt_kind="exp", rt_lam=2.0, idle_step=0.5, name=f"s{i}")
+    for i, b in enumerate(np.linspace(0.4, 1.0, S))]
+batch = engine.stack_scenarios(scenarios)
+program = engine.quadratic_program("minibatch", 8)
+data = engine.jax_quadratic(quad)
+cfg = engine.SimConfig(n_ticks=n_ticks, batch=8)
+mesh = make_scenario_mesh(n_dev)
+
+def run():
+    res = engine.simulate_sharded(batch, program, w0, data, R, cfg,
+                                  mesh=mesh)
+    jax.block_until_ready(res.final_model)
+    return res
+
+run()                                   # compile
+t0 = time.perf_counter()
+run()
+us = (time.perf_counter() - t0) * 1e6
+print("RESULT " + json.dumps({"us": us}))
+"""
+
+
+def bench_sharded():
+    """Engine throughput under `simulate_sharded` at 1/2/4/8 forced host
+    devices (one subprocess per device count, so XLA_FLAGS takes effect
+    before backend init — the virtual-device CPU recipe from README's
+    "Running on a mesh"). Derived column reports cell-ticks/sec
+    (S × R × n_ticks / wall) and the speedup over the 1-device run.
+
+    On the 1-core CI box the virtual devices share one core, so the
+    honest expectation is ~flat scaling there; the row exists to keep the
+    sharded path exercised and to report real scaling on multi-core
+    hosts."""
+    import subprocess
+    import sys
+
+    S, R, n_ticks = (8, 2, 8) if SMOKE else (64, 8, 200)
+    counts = [1, 2] if SMOKE else [1, 2, 4, 8]
+    src = os.path.join(os.path.dirname(__file__), "..", "src")
+    env = dict(os.environ)
+    env["PYTHONPATH"] = src + (os.pathsep + env["PYTHONPATH"]
+                               if "PYTHONPATH" in env else "")
+    env.pop("XLA_FLAGS", None)
+    base_us = None
+    for n_dev in counts:
+        out = subprocess.run(
+            [sys.executable, "-c", _SHARDED_BENCH_SCRIPT, str(n_dev),
+             str(S), str(R), str(n_ticks)],
+            env=env, capture_output=True, text=True, timeout=900)
+        if out.returncode != 0:
+            raise RuntimeError(f"sharded bench subprocess (d={n_dev}) "
+                               f"failed:\n{out.stderr[-2000:]}")
+        line = [l for l in out.stdout.splitlines()
+                if l.startswith("RESULT ")][-1]
+        rec = json.loads(line[len("RESULT "):])
+        if "skip" in rec:
+            emit(f"sharded_d{n_dev}", 0.0,
+                 f"skipped;only_{rec['skip']}_devices")
+            continue
+        us = rec["us"]
+        if base_us is None:
+            base_us = us
+        ticks_per_sec = S * R * n_ticks / (us / 1e6)
+        emit(f"sharded_d{n_dev}", us,
+             f"grid={S}x{R};n_ticks={n_ticks};"
+             f"cell_ticks_per_sec={ticks_per_sec:.0f};"
+             f"speedup_vs_d1={base_us / us:.2f}x")
+
+
 BENCHES = {
     "fig3": bench_fig3,
     "fig4": bench_fig4,
@@ -713,6 +810,7 @@ BENCHES = {
     "fig5b": bench_fig5b,
     "scenarios": bench_scenarios,
     "trainer": bench_trainer,
+    "sharded": bench_sharded,
     "multibid": bench_multibid,
     "roofline": bench_roofline,
     "steps": bench_steps,

@@ -1,21 +1,37 @@
 #!/usr/bin/env bash
 # Tier-1 CI: fast test suite + a 5-scenario engine smoke sweep.
-# Run from anywhere: scripts/ci.sh [--smoke-bench]
+# Run from anywhere: scripts/ci.sh [--smoke-bench] [--devices N]
 #
 # --smoke-bench additionally runs every benchmark in --smoke mode (2-tick /
 # 2-seed budgets) so perf-path regressions — import errors, shape breaks,
 # jit failures in benchmarks/run.py — fail CI instead of rotting silently.
+# (This includes the sharded engine bench, which smoke-runs at 1 and 2
+# forced host devices in its own subprocesses.)
+#
+# --devices N forces N virtual host devices for the whole run
+# (XLA_FLAGS=--xla_force_host_platform_device_count=N, set before any jax
+# import) so the `multidevice`-marked sharded tests run natively instead
+# of skipping.
 set -euo pipefail
 cd "$(dirname "$0")/.."
 export PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH}
 
 SMOKE_BENCH=0
-for arg in "$@"; do
-  case "$arg" in
-    --smoke-bench) SMOKE_BENCH=1 ;;
-    *) echo "unknown option: $arg" >&2; exit 2 ;;
+DEVICES=0
+while [ "$#" -gt 0 ]; do
+  case "$1" in
+    --smoke-bench) SMOKE_BENCH=1; shift ;;
+    --devices)
+      [ "$#" -ge 2 ] || { echo "--devices needs a count" >&2; exit 2; }
+      DEVICES="$2"; shift 2 ;;
+    *) echo "unknown option: $1" >&2; exit 2 ;;
   esac
 done
+
+if [ "$DEVICES" -gt 0 ]; then
+  export XLA_FLAGS="--xla_force_host_platform_device_count=$DEVICES${XLA_FLAGS:+ $XLA_FLAGS}"
+  echo "== forcing $DEVICES virtual host devices (XLA_FLAGS=$XLA_FLAGS) =="
+fi
 
 echo "== tier-1 tests (excluding slow) =="
 python -m pytest -x -q -m "not slow"

@@ -18,6 +18,39 @@ def make_host_mesh():
     return jax.make_mesh((1, 1), ("data", "model"))
 
 
+def make_scenario_mesh(n_devices: int | None = None):
+    """1-D mesh over the scenario axis of the batched engine grid.
+
+    The single axis is named ``data`` — `sim.engine.simulate_sharded`
+    partitions the leading scenario axis of the stacked grid across it.
+    Defaults to every visible device; on a CPU host, force N virtual
+    devices with ``XLA_FLAGS=--xla_force_host_platform_device_count=N``
+    before jax initializes (``scripts/ci.sh --devices N`` does this)."""
+    if n_devices is None:
+        n_devices = jax.device_count()
+    return jax.make_mesh((n_devices,), ("data",))
+
+
+def make_scenario_replica_mesh(n_scenario: int | None = None,
+                               n_replica: int | None = None):
+    """2-D mesh sharding scenarios over ``data`` and seeds over
+    ``replica``. With only one size given, the other takes the remaining
+    devices; with neither, all devices go to the scenario axis."""
+    total = jax.device_count()
+    if n_scenario is None and n_replica is None:
+        n_scenario, n_replica = total, 1
+    elif n_scenario is None:
+        n_scenario = total // n_replica
+    elif n_replica is None:
+        n_replica = total // n_scenario
+    if n_scenario * n_replica > total:
+        raise ValueError(
+            f"mesh shape ({n_scenario}, {n_replica}) needs "
+            f"{n_scenario * n_replica} devices but only {total} are "
+            "visible")
+    return jax.make_mesh((n_scenario, n_replica), ("data", "replica"))
+
+
 def data_parallel_workers(mesh) -> int:
     """Number of elastic worker slices = product of the batch axes."""
     sizes = dict(zip(mesh.axis_names, mesh.devices.shape))

@@ -81,11 +81,25 @@ def main():
     ap.add_argument("--fused-update", action="store_true",
                     help="apply the elastic SGD update with the fused "
                          "Pallas kernel (requires --megabatch)")
+    ap.add_argument("--mesh", type=int, default=None, metavar="N",
+                    help="shard the batched grid's scenario axis over N "
+                         "devices via simulate_sharded (requires "
+                         "--batched; bit-exact with the unsharded run; "
+                         "on CPU, force virtual devices with XLA_FLAGS="
+                         "--xla_force_host_platform_device_count=N)")
+    ap.add_argument("--mesh-replica", type=int, default=None, metavar="M",
+                    help="additionally shard the seed/replica axis over M "
+                         "devices (2-D N x M scenario x replica mesh; "
+                         "requires --mesh)")
     args = ap.parse_args()
     if args.fused_update and not args.megabatch:
         ap.error("--fused-update requires --megabatch")
     if args.megabatch and not args.batched:
         ap.error("--megabatch requires --batched")
+    if args.mesh_replica and args.mesh is None:
+        ap.error("--mesh-replica requires --mesh")
+    if args.mesh is not None and not args.batched:
+        ap.error("--mesh requires --batched")
     if args.batched:
         args.local = True
 
@@ -123,14 +137,24 @@ def main():
     trainer = ElasticTrainer(job=job, cluster=cluster, strategy=strategy,
                              seed=args.seed)
     if args.batched:
+        mesh = None
+        if args.mesh is not None:
+            from repro.launch.mesh import (make_scenario_mesh,
+                                           make_scenario_replica_mesh)
+            mesh = (make_scenario_replica_mesh(args.mesh, args.mesh_replica)
+                    if args.mesh_replica else make_scenario_mesh(args.mesh))
         res = trainer.run_batched(seeds=args.seeds,
                                   iterations=args.iterations,
                                   megabatch=args.megabatch,
-                                  use_fused_update=args.fused_update)
+                                  use_fused_update=args.fused_update,
+                                  mesh=mesh)
         out = {name: res.run(name).summary for name in res.names}
         out["_engine"] = {"replicas": len(res.names) * res.n_seeds,
                           "megabatch": args.megabatch,
-                          "fused_update": args.fused_update}
+                          "fused_update": args.fused_update,
+                          "mesh": None if mesh is None else
+                          dict(zip(mesh.axis_names,
+                                   (int(s) for s in mesh.devices.shape)))}
         print(json.dumps(out, indent=1, default=float))
         return
     summary = trainer.run(iterations=args.iterations)

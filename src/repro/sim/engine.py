@@ -55,6 +55,7 @@ from __future__ import annotations
 
 import dataclasses
 import functools
+import inspect
 from typing import Any, Callable, Dict, NamedTuple, Optional, Sequence
 
 import numpy as np
@@ -63,6 +64,18 @@ import jax
 import jax.numpy as jnp
 from jax import lax
 from jax.scipy.special import ndtr, ndtri
+from jax.sharding import PartitionSpec
+
+try:  # jax >= 0.6
+    _shard_map = jax.shard_map
+except AttributeError:  # pragma: no cover
+    from jax.experimental.shard_map import shard_map as _shard_map
+
+# the "don't check replication" kwarg was renamed check_rep → check_vma
+_SHMAP_NO_CHECK = (
+    {"check_vma": False}
+    if "check_vma" in inspect.signature(_shard_map).parameters
+    else {"check_rep": False})
 
 # The pad value for absent workers in stacked bid schedules lives with the
 # strategies (which build the schedules); re-exported here for engine users.
@@ -997,6 +1010,19 @@ def simulate_program(scenarios, program: ModelProgram, model0, data, seeds,
         seeds = np.arange(int(seeds))
     seeds = jnp.asarray(np.asarray(seeds, np.int32))
     tick0 = int(tick0)
+    n_run = _check_run_window(cfg, tick0)
+    if init_state is None:
+        init_state = initial_state(scenarios, model0, len(seeds))
+    fn = _simulate_jit_donated if donate else _simulate_jit
+    final, snaps = fn(scenarios, init_state, data, seeds,
+                      jnp.asarray(tick0, jnp.int32), program, n_run,
+                      cfg.snapshot_every)
+    return _engine_result(final, snaps, scenarios, cfg, tick0, n_run)
+
+
+def _check_run_window(cfg: SimConfig, tick0: int) -> int:
+    """Validate the (tick0, n_ticks, snapshot_every) window; returns the
+    number of ticks left to run."""
     if not 0 <= tick0 <= cfg.n_ticks:
         raise ValueError(f"tick0={tick0} outside [0, n_ticks={cfg.n_ticks}]")
     n_run = cfg.n_ticks - tick0
@@ -1009,12 +1035,11 @@ def simulate_program(scenarios, program: ModelProgram, model0, data, seeds,
             f"snapshot_every={cfg.snapshot_every} exceeds the remaining "
             f"tick budget ({n_run} ticks from tick0={tick0}): no snapshot "
             "would ever be emitted")
-    if init_state is None:
-        init_state = initial_state(scenarios, model0, len(seeds))
-    fn = _simulate_jit_donated if donate else _simulate_jit
-    final, snaps = fn(scenarios, init_state, data, seeds,
-                      jnp.asarray(tick0, jnp.int32), program, n_run,
-                      cfg.snapshot_every)
+    return n_run
+
+
+def _engine_result(final: SimState, snaps, scenarios: ScenarioBatch,
+                   cfg: SimConfig, tick0: int, n_run: int) -> EngineResult:
     snap_ticks = None
     if snaps is not None:
         n_snap = n_run // cfg.snapshot_every
@@ -1032,6 +1057,153 @@ def simulate_program(scenarios, program: ModelProgram, model0, data, seeds,
         final_model=final.model,
         snapshots=snaps,
         snapshot_ticks=snap_ticks)
+
+
+# --------------------------------------------------------------------------
+# Mesh execution: shard the (S, R) grid over devices
+# --------------------------------------------------------------------------
+
+
+def _pad_axis(x: jnp.ndarray, axis: int, target: int) -> jnp.ndarray:
+    """Pad ``x`` along ``axis`` to length ``target`` by repeating the last
+    slice (cells are independent, so duplicated rows never perturb real
+    ones — they are sliced away after the run)."""
+    n = x.shape[axis]
+    if n == target:
+        return x
+    idx = jnp.full((target - n,), n - 1, jnp.int32)
+    return jnp.concatenate([x, jnp.take(x, idx, axis=axis)], axis=axis)
+
+
+def _padded_size(n: int, shards: int) -> int:
+    """Rows after padding ``n`` across ``shards`` devices: the smallest
+    multiple of ``shards`` that is ≥ n AND gives every shard ≥ 2 rows.
+
+    The ≥ 2 floor is the bit-exactness envelope: XLA:CPU compiles a
+    size-1 vmap lane's dots/einsums with a different contraction order
+    than the same cell inside a wider batch (observed ~1e-7 drift), while
+    every width ≥ 2 reproduces the unsharded path bit-for-bit. Padding a
+    1-row shard up to 2 costs one duplicated cell and keeps the sharded
+    path exactly pinned to the vmapped one."""
+    if shards <= 1:
+        return n
+    return shards * max(2, -(-n // shards))
+
+
+def _mesh_axis_size(mesh, name: str) -> int:
+    return dict(zip(mesh.axis_names, mesh.devices.shape)).get(name, 1)
+
+
+def _grid_specs(mesh):
+    """(scenario, grid, seed) PartitionSpecs for whichever of the
+    ``data``/``replica`` axes the mesh actually has."""
+    ds = "data" if "data" in mesh.axis_names else None
+    rs = "replica" if "replica" in mesh.axis_names else None
+    return PartitionSpec(ds), PartitionSpec(ds, rs), PartitionSpec(rs)
+
+
+def _sharded_sim(batch, state0, data, seeds, tick0, mesh, program, n_run,
+                 k_snap):
+    sspec, gspec, seedspec = _grid_specs(mesh)
+
+    def local(b, st, d, sd, t0):
+        return _vmapped_sim(b, st, d, sd, t0, program, n_run, k_snap)
+
+    return _shard_map(
+        local, mesh=mesh,
+        in_specs=(sspec, gspec, PartitionSpec(), seedspec,
+                  PartitionSpec()),
+        out_specs=(gspec, gspec), **_SHMAP_NO_CHECK)(
+            batch, state0, data, seeds, tick0)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("mesh", "program", "n_run", "k_snap"))
+def _simulate_sharded_jit(batch, state0, data, seeds, tick0, mesh, program,
+                          n_run, k_snap):
+    return _sharded_sim(batch, state0, data, seeds, tick0, mesh, program,
+                        n_run, k_snap)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("mesh", "program", "n_run", "k_snap"),
+                   donate_argnames=("state0",))
+def _simulate_sharded_jit_donated(batch, state0, data, seeds, tick0, mesh,
+                                  program, n_run, k_snap):
+    return _sharded_sim(batch, state0, data, seeds, tick0, mesh, program,
+                        n_run, k_snap)
+
+
+def simulate_sharded(scenarios, program: ModelProgram, model0, data, seeds,
+                     cfg: SimConfig, *, mesh=None, donate: bool = False,
+                     init_state: Optional[SimState] = None,
+                     tick0: int = 0) -> EngineResult:
+    """`simulate_program` over a device mesh: the leading scenario axis of
+    the stacked grid (``SimState`` carry, price traces, plan tables — every
+    per-scenario row) is partitioned across the mesh's ``data`` axis, and
+    the seed/replica axis across its ``replica`` axis when present, via
+    ``shard_map``. Each device scans only its shard of the (S, R) grid;
+    there is no cross-device communication inside the scan (cells are
+    independent), so throughput scales with the mesh.
+
+    Bit-exactness contract: per-cell RNG folds the seed *value* and the
+    absolute tick index — never a device or shard position — so a sharded
+    run is bit-identical to the single-device vmapped path, snapshots
+    included. Non-divisible grids are handled by padding each sharded axis
+    (repeating the last row) to a multiple of the axis size with at least
+    2 rows per shard (see `_padded_size` for why 2), and slicing the
+    padding back off the results.
+
+    ``mesh``: a `jax.sharding.Mesh` whose sharded axes are named ``data``
+    (scenarios) and/or ``replica`` (seeds) — `repro.launch.mesh` has
+    constructors; defaults to a 1-D scenario mesh over every visible
+    device. On a CPU host, force N virtual devices with
+    ``XLA_FLAGS=--xla_force_host_platform_device_count=N`` *before* jax
+    initializes (the CI recipe; see scripts/ci.sh --devices).
+
+    Checkpoints are mesh-portable: a snapshot from a sharded run restores
+    through the same `train.checkpoint` path and can resume on a different
+    mesh shape — or unsharded — bit-exactly.
+    """
+    if not isinstance(scenarios, ScenarioBatch):
+        scenarios = stack_scenarios(scenarios)
+    if np.isscalar(seeds):
+        seeds = np.arange(int(seeds))
+    seeds = jnp.asarray(np.asarray(seeds, np.int32))
+    if mesh is None:
+        from repro.launch.mesh import make_scenario_mesh
+        mesh = make_scenario_mesh()
+    bad = [a for a in mesh.axis_names if a not in ("data", "replica")]
+    if bad:
+        raise ValueError(
+            f"mesh axes {bad} are not understood by the engine: the "
+            "scenario grid shards over axes named 'data' (scenarios) "
+            "and/or 'replica' (seeds) — build the mesh with "
+            "repro.launch.mesh.make_scenario_mesh / "
+            "make_scenario_replica_mesh")
+    tick0 = int(tick0)
+    n_run = _check_run_window(cfg, tick0)
+    S, R = scenarios.n_scenarios, len(seeds)
+    s_pad = _padded_size(S, _mesh_axis_size(mesh, "data"))
+    r_pad = _padded_size(R, _mesh_axis_size(mesh, "replica"))
+    batch_p = (scenarios if s_pad == S else
+               jax.tree.map(lambda x: _pad_axis(x, 0, s_pad), scenarios))
+    seeds_p = _pad_axis(seeds, 0, r_pad)
+    if init_state is None:
+        state0 = initial_state(batch_p, model0, r_pad)
+    else:
+        state0 = jax.tree.map(
+            lambda x: _pad_axis(_pad_axis(x, 0, s_pad), 1, r_pad),
+            init_state)
+    fn = _simulate_sharded_jit_donated if donate else _simulate_sharded_jit
+    final, snaps = fn(batch_p, state0, data, seeds_p,
+                      jnp.asarray(tick0, jnp.int32), mesh, program, n_run,
+                      cfg.snapshot_every)
+    if (s_pad, r_pad) != (S, R):
+        final = jax.tree.map(lambda x: x[:S, :R], final)
+        if snaps is not None:
+            snaps = jax.tree.map(lambda x: x[:S, :R], snaps)
+    return _engine_result(final, snaps, scenarios, cfg, tick0, n_run)
 
 
 def snapshot_state(result: EngineResult, index: int = -1):

@@ -9,12 +9,25 @@ the engine's full batched ``SimState`` carry (`trainer.save_batched` /
 bit-exactly."""
 from __future__ import annotations
 
+import glob
+import json
 import os
+import queue
 import tempfile
-from typing import Any, Tuple
+import threading
+from typing import Any, Optional, Tuple
 
 import jax
 import numpy as np
+
+SHARDED_FORMAT = "repro-sharded-checkpoint-v1"
+
+
+class CheckpointError(ValueError):
+    """A checkpoint on disk is corrupt or incomplete: a sharded manifest
+    that is unreadable, malformed, or whose shard files are missing or
+    inconsistent. Raised *before* anything is restored — never a silent
+    partial restore."""
 
 
 def _flatten(tree) -> dict:
@@ -24,19 +37,27 @@ def _flatten(tree) -> dict:
     return flat
 
 
-def save(path: str, state: Any, step: int) -> None:
-    flat = _flatten(state)
-    flat["__step__"] = np.asarray(step)
+def _atomic_write(path: str, write_fn, suffix: str = ".tmp.npz") -> None:
+    """Write via tmp + rename in path's directory so a preemption
+    mid-write never corrupts an existing file. The tmp name keeps an
+    .npz suffix by default because np.savez silently appends one to
+    names without it, which would orphan the rename."""
     d = os.path.dirname(os.path.abspath(path))
     os.makedirs(d, exist_ok=True)
-    fd, tmp = tempfile.mkstemp(dir=d, suffix=".tmp.npz")
+    fd, tmp = tempfile.mkstemp(dir=d, suffix=suffix)
     os.close(fd)
     try:
-        np.savez(tmp, **flat)
+        write_fn(tmp)
         os.replace(tmp, path)
     finally:
         if os.path.exists(tmp):
             os.unlink(tmp)
+
+
+def save(path: str, state: Any, step: int) -> None:
+    flat = _flatten(state)
+    flat["__step__"] = np.asarray(step)
+    _atomic_write(path, lambda tmp: np.savez(tmp, **flat))
 
 
 def restore(path: str, like: Any) -> Tuple[Any, int]:
@@ -52,29 +73,240 @@ def restore(path: str, like: Any) -> Tuple[Any, int]:
             raise ValueError(f"{path} is not a repro checkpoint "
                              "(missing __step__)")
         step = int(data["__step__"])
-        leaves_paths = jax.tree_util.tree_flatten_with_path(like)[0]
-        treedef = jax.tree_util.tree_structure(like)
-        keys = [jax.tree_util.keystr(p) for p, _ in leaves_paths]
-        have = set(data.files) - {"__step__"}
-        missing = [k for k in keys if k not in have]
-        extra = sorted(have - set(keys))
-        if missing or extra:
-            raise ValueError(
-                f"checkpoint {path} does not match the restore template: "
-                f"{len(missing)} template leaves missing from the "
-                f"checkpoint {missing[:4]}{'...' if len(missing) > 4 else ''}"
-                f", {len(extra)} checkpoint keys with no template leaf "
-                f"{extra[:4]}{'...' if len(extra) > 4 else ''}")
-        leaves = []
-        for (p, leaf), key in zip(leaves_paths, keys):
-            arr = data[key]
-            if isinstance(leaf, (bool, int, float)):
-                # Python-scalar template leaf (e.g. a step count or flag
-                # carried in a config-bearing pytree) — restore the same
-                # Python type, not a 0-d array
-                leaves.append(type(leaf)(arr.item()))
-            elif hasattr(leaf, "dtype"):
-                leaves.append(jax.numpy.asarray(arr, dtype=leaf.dtype))
-            else:
-                leaves.append(arr)
-    return jax.tree_util.tree_unflatten(treedef, leaves), step
+        tree = _fill_template(data, set(data.files) - {"__step__"},
+                              path, like)
+    return tree, step
+
+
+def _fill_template(data, have: set, path: str, like: Any) -> Any:
+    """Rebuild `like`'s structure from a mapping of keystr → array.
+
+    `data` is anything indexable by key (an open NpzFile or a dict);
+    `have` is the set of leaf keys it holds. Raises ValueError naming
+    missing/extra keys on structure drift."""
+    leaves_paths = jax.tree_util.tree_flatten_with_path(like)[0]
+    treedef = jax.tree_util.tree_structure(like)
+    keys = [jax.tree_util.keystr(p) for p, _ in leaves_paths]
+    missing = [k for k in keys if k not in have]
+    extra = sorted(have - set(keys))
+    if missing or extra:
+        raise ValueError(
+            f"checkpoint {path} does not match the restore template: "
+            f"{len(missing)} template leaves missing from the "
+            f"checkpoint {missing[:4]}{'...' if len(missing) > 4 else ''}"
+            f", {len(extra)} checkpoint keys with no template leaf "
+            f"{extra[:4]}{'...' if len(extra) > 4 else ''}")
+    leaves = []
+    for (p, leaf), key in zip(leaves_paths, keys):
+        arr = data[key]
+        if isinstance(leaf, (bool, int, float)):
+            # Python-scalar template leaf (e.g. a step count or flag
+            # carried in a config-bearing pytree) — restore the same
+            # Python type, not a 0-d array
+            leaves.append(type(leaf)(arr.item()))
+        elif hasattr(leaf, "dtype"):
+            leaves.append(jax.numpy.asarray(arr, dtype=leaf.dtype))
+        else:
+            leaves.append(arr)
+    return jax.tree_util.tree_unflatten(treedef, leaves)
+
+
+# --------------------------------------------------------------------------
+# Sharded checkpoints: per-shard .npz files + a JSON index manifest
+# --------------------------------------------------------------------------
+
+
+def _shard_file(path: str, step: int, i: int, n: int) -> str:
+    return f"{path}.t{step}.shard{i:02d}-of-{n:02d}.npz"
+
+
+def save_sharded(path: str, state: Any, step: int, n_shards: int) -> None:
+    """Split every leaf of `state` along its leading axis into `n_shards`
+    per-shard .npz files next to `path`, then write `path` itself as a
+    JSON manifest indexing them.
+
+    The manifest is written (atomically) *last*, so a preemption
+    mid-save leaves the previous manifest — and the complete shard set
+    it references — intact; the new shard files are step-tagged and
+    never collide with the old ones. Stale shard files from earlier
+    steps are pruned after the manifest lands.
+
+    Every leaf must share the same leading-axis length (true of the
+    engine's (S, R, ...) `SimState` carry, sharded by scenario). Restore
+    with `restore_sharded` / `restore_any` on any mesh shape — the
+    manifest records per-shard row counts, so reassembly is exact
+    regardless of how many devices wrote or read it."""
+    flat = _flatten(state)
+    if not flat:
+        raise ValueError("cannot shard an empty pytree")
+    rows = {v.shape[0] if v.ndim else None for v in flat.values()}
+    if len(rows) != 1 or None in rows:
+        raise ValueError(
+            "sharded save needs every leaf to share one leading-axis "
+            f"length; got leading sizes {sorted(map(str, rows))}")
+    n_rows = rows.pop()
+    n_shards = max(1, min(int(n_shards), n_rows))
+    bounds = np.cumsum([0] + [len(c) for c in
+                              np.array_split(np.arange(n_rows), n_shards)])
+    shards = []
+    for i in range(n_shards):
+        lo, hi = int(bounds[i]), int(bounds[i + 1])
+        fname = _shard_file(path, step, i, n_shards)
+        _atomic_write(fname, lambda tmp, lo=lo, hi=hi: np.savez(
+            tmp, **{k: v[lo:hi] for k, v in flat.items()}))
+        shards.append({"file": os.path.basename(fname), "rows": hi - lo})
+    manifest = {"format": SHARDED_FORMAT, "step": int(step),
+                "n_shards": n_shards, "rows": int(n_rows),
+                "keys": sorted(flat), "shards": shards}
+    _atomic_write(path, lambda tmp: open(tmp, "w").write(
+        json.dumps(manifest, indent=1)), suffix=".tmp.json")
+    current = {s["file"] for s in shards}
+    for old in glob.glob(glob.escape(path) + ".t*.shard*.npz"):
+        if os.path.basename(old) not in current:
+            os.unlink(old)
+
+
+def restore_sharded(path: str, like: Any) -> Tuple[Any, int]:
+    """Reassemble a `save_sharded` checkpoint into `like`'s structure.
+
+    Any corruption — unreadable/malformed manifest, wrong format tag,
+    missing shard file, shard whose row count disagrees with the
+    manifest — raises `CheckpointError` naming the cause before any
+    state is returned."""
+    try:
+        with open(path) as f:
+            manifest = json.load(f)
+    except (json.JSONDecodeError, UnicodeDecodeError) as e:
+        raise CheckpointError(
+            f"{path} is not a readable sharded-checkpoint manifest: {e}")
+    if not isinstance(manifest, dict) or \
+            manifest.get("format") != SHARDED_FORMAT:
+        raise CheckpointError(
+            f"{path} is not a {SHARDED_FORMAT} manifest "
+            f"(format={manifest.get('format') if isinstance(manifest, dict) else type(manifest).__name__!r})")
+    for field in ("step", "n_shards", "rows", "keys", "shards"):
+        if field not in manifest:
+            raise CheckpointError(
+                f"manifest {path} is missing required field '{field}'")
+    shards = manifest["shards"]
+    if len(shards) != manifest["n_shards"]:
+        raise CheckpointError(
+            f"manifest {path} lists {len(shards)} shards but declares "
+            f"n_shards={manifest['n_shards']}")
+    base = os.path.dirname(os.path.abspath(path))
+    keys = manifest["keys"]
+    parts = {k: [] for k in keys}
+    for i, entry in enumerate(shards):
+        fname = os.path.join(base, entry["file"])
+        if not os.path.exists(fname):
+            raise CheckpointError(
+                f"shard {i} of checkpoint {path} is missing: "
+                f"{entry['file']} not found — refusing a partial restore")
+        with np.load(fname) as data:
+            got = set(data.files)
+            if got != set(keys):
+                raise CheckpointError(
+                    f"shard {i} ({entry['file']}) keys disagree with the "
+                    f"manifest: missing {sorted(set(keys) - got)[:4]}, "
+                    f"unexpected {sorted(got - set(keys))[:4]}")
+            for k in keys:
+                arr = data[k]
+                if arr.shape[0] != entry["rows"]:
+                    raise CheckpointError(
+                        f"shard {i} ({entry['file']}) has {arr.shape[0]} "
+                        f"rows of '{k}' but the manifest promised "
+                        f"{entry['rows']}")
+                parts[k].append(arr)
+    full = {k: np.concatenate(parts[k], axis=0) if len(parts[k]) > 1
+            else parts[k][0] for k in keys}
+    if keys and next(iter(full.values())).shape[0] != manifest["rows"]:
+        raise CheckpointError(
+            f"checkpoint {path} reassembles to "
+            f"{next(iter(full.values())).shape[0]} rows but the manifest "
+            f"promised {manifest['rows']}")
+    tree = _fill_template(full, set(keys), path, like)
+    return tree, int(manifest["step"])
+
+
+def restore_any(path: str, like: Any) -> Tuple[Any, int]:
+    """Restore either checkpoint format: a flat .npz (`save`) or a
+    sharded manifest (`save_sharded`), sniffed from the file's first
+    bytes (npz is a zip: 'PK'; the manifest is JSON: '{')."""
+    with open(path, "rb") as f:
+        head = f.read(2)
+    if head[:1] == b"{":
+        return restore_sharded(path, like)
+    return restore(path, like)
+
+
+# --------------------------------------------------------------------------
+# Async host offload: never stall the scan on checkpoint I/O
+# --------------------------------------------------------------------------
+
+
+class AsyncCheckpointWriter:
+    """Serializes checkpoints on a background thread so the training scan
+    never blocks on disk I/O.
+
+    `submit(...)` enqueues a save and returns immediately — jax arrays
+    are immutable, so the enqueued state is a consistent snapshot even
+    while the next chunk runs (callers must not donate the submitted
+    buffers). Saves are written in submission order by a single daemon
+    thread; `wait()` blocks until the queue drains, and a failed save
+    re-raises from the next `submit`/`wait`/`close` so errors are never
+    silently dropped. Usable as a context manager."""
+
+    def __init__(self):
+        self._q: queue.Queue = queue.Queue()
+        self._error: Optional[BaseException] = None
+        self._thread = threading.Thread(target=self._run, daemon=True)
+        self._thread.start()
+
+    def _run(self):
+        while True:
+            item = self._q.get()
+            try:
+                if item is None:
+                    return
+                fn, args = item
+                if self._error is None:
+                    fn(*args)
+            except BaseException as e:  # noqa: BLE001 — deferred re-raise
+                self._error = e
+            finally:
+                self._q.task_done()
+
+    def _check(self):
+        if self._error is not None:
+            err, self._error = self._error, None
+            raise err
+
+    def submit(self, path: str, state: Any, step: int,
+               n_shards: Optional[int] = None) -> None:
+        """Enqueue a save of `state` (sharded when `n_shards`); returns
+        without waiting for the write."""
+        self._check()
+        if n_shards:
+            self._q.put((save_sharded, (path, state, step, n_shards)))
+        else:
+            self._q.put((save, (path, state, step)))
+
+    def wait(self) -> None:
+        """Block until every submitted save has hit disk."""
+        self._q.join()
+        self._check()
+
+    def close(self) -> None:
+        """Drain the queue and stop the thread. Idempotent."""
+        if self._thread.is_alive():
+            self._q.join()
+            self._q.put(None)
+            self._thread.join()
+        self._check()
+
+    def __enter__(self):
+        return self
+
+    def __exit__(self, *exc):
+        self.close()
+        return False

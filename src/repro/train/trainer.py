@@ -140,7 +140,8 @@ class ElasticTrainer:
                     batch_fn: Optional[Callable[[int], Dict]] = None,
                     snapshot_every: int = 0,
                     megabatch: bool = False,
-                    use_fused_update: bool = False):
+                    use_fused_update: bool = False,
+                    mesh=None):
         """Scan-native training: the trainer's market/runtime plus a grid of
         strategies (default: its own) × seeds, every configuration training
         a real model end-to-end in one compiled call.
@@ -169,7 +170,7 @@ class ElasticTrainer:
             self.job, scenarios, seeds, n_ticks=n_ticks,
             n_batches=n_batches, batch_fn=batch_fn, batch_seed=self.seed,
             snapshot_every=snapshot_every, megabatch=megabatch,
-            use_fused_update=use_fused_update)
+            use_fused_update=use_fused_update, mesh=mesh)
         if self.checkpoint_path and res.snapshots is not None:
             save_batched(self.checkpoint_path, res)
         return BatchResult(names=[s.name for s in scenarios], result=res)
@@ -180,7 +181,8 @@ class ElasticTrainer:
                        n_ticks: Optional[int] = None,
                        n_batches: Optional[int] = None,
                        batch_fn: Optional[Callable[[int], Dict]] = None,
-                       snapshot_every: int = 0):
+                       snapshot_every: int = 0,
+                       mesh=None):
         """Restart a preempted `run_batched` from ``checkpoint_path``: the
         batched carry (every replica's params/opt_state/clock/cost and the
         loss trajectories so far) is restored and the scan continues from
@@ -200,7 +202,8 @@ class ElasticTrainer:
         res = train_batched(
             self.job, batch, seeds, n_ticks=n_ticks, n_batches=n_batches,
             batch_fn=batch_fn, batch_seed=self.seed, donate=False,
-            snapshot_every=snapshot_every, init_state=state, tick0=tick)
+            snapshot_every=snapshot_every, init_state=state, tick0=tick,
+            mesh=mesh)
         if self.checkpoint_path and res.snapshots is not None:
             save_batched(self.checkpoint_path, res)
         return BatchResult(names=[s.name for s in scenarios], result=res)
@@ -348,7 +351,8 @@ def train_batched(job: JobConfig,
                   init_state: Optional[engine.SimState] = None,
                   tick0: int = 0,
                   megabatch: bool = False,
-                  use_fused_update: bool = False) -> engine.EngineResult:
+                  use_fused_update: bool = False,
+                  mesh=None) -> engine.EngineResult:
     """Train a real model under every scenario × seed in one compiled call.
 
     Folds the elastic masked train step into the batched engine: the whole
@@ -381,6 +385,13 @@ def train_batched(job: JobConfig,
     holds the flat {"p", "v"} buffers; `unpack_batched_model` converts
     back. ``use_fused_update`` additionally routes the elastic SGD apply
     through the fused Pallas kernel (`kernels.ops.fused_elastic_update`).
+
+    ``mesh`` routes execution through `engine.simulate_sharded`: the
+    scenario axis of the grid shards over the mesh's ``data`` axis and
+    the seed axis over its ``replica`` axis (when present), each device
+    scanning only its shard — bit-exact with the single-device path
+    (`launch.mesh.make_scenario_mesh` / `make_scenario_replica_mesh`
+    build the mesh; see tests/test_sharded_parity.py).
     """
     scenarios, program, data, n_ticks = _prepare_batched(
         job, scenarios, n_ticks=n_ticks, n_batches=n_batches,
@@ -395,6 +406,10 @@ def train_batched(job: JobConfig,
         model0 = init_train_state(job.model, job,
                                   jax.random.PRNGKey(job.seed))
     cfg = engine.SimConfig(n_ticks=n_ticks, snapshot_every=snapshot_every)
+    if mesh is not None:
+        return engine.simulate_sharded(scenarios, program, model0, data,
+                                       seeds, cfg, mesh=mesh, donate=donate,
+                                       init_state=init_state, tick0=tick0)
     return engine.simulate_program(scenarios, program, model0, data, seeds,
                                    cfg, donate=donate,
                                    init_state=init_state, tick0=tick0)
@@ -445,12 +460,29 @@ def batched_init_state(job: JobConfig,
 
 
 def save_batched(path: str, result: engine.EngineResult,
-                 index: int = -1) -> int:
+                 index: int = -1, *, shards: Optional[int] = None,
+                 writer: Optional[ckpt_mod.AsyncCheckpointWriter] = None
+                 ) -> int:
     """Persist one snapshot of a ``snapshot_every`` run as a durable
-    checkpoint (atomic .npz via `checkpoint.save`); returns the snapshot's
-    absolute tick count (the ``tick0`` a resume passes back)."""
+    checkpoint; returns the snapshot's absolute tick count (the ``tick0``
+    a resume passes back).
+
+    ``shards=n`` writes a *sharded* checkpoint — n per-scenario-slice
+    .npz files plus a JSON manifest at ``path`` (`checkpoint.save_sharded`)
+    instead of one flat .npz; natural for mesh runs (one shard per
+    ``data``-axis device) and for carries too large to serialize in one
+    file. Either format restores through `restore_batched` on any mesh
+    shape, bit-exactly. ``writer`` offloads the serialization to an
+    `AsyncCheckpointWriter` background thread — the call returns as soon
+    as the snapshot is enqueued (do not donate the result's buffers
+    before ``writer.wait()``)."""
     state, tick = engine.snapshot_state(result, index)
-    ckpt_mod.save(path, state, tick)
+    if writer is not None:
+        writer.submit(path, state, tick, n_shards=shards)
+    elif shards:
+        ckpt_mod.save_sharded(path, state, tick, shards)
+    else:
+        ckpt_mod.save(path, state, tick)
     return tick
 
 
@@ -463,9 +495,15 @@ def restore_batched(path: str, job: JobConfig,
     ``(state, tick)`` for ``train_batched(init_state=state, tick0=tick)``;
     raises a key-naming ValueError if the job/scenario grid drifted from
     the one that was checkpointed. Pass ``megabatch=True`` for checkpoints
-    written by a megabatched run (flat replica-blocked carry)."""
+    written by a megabatched run (flat replica-blocked carry).
+
+    Both checkpoint formats are accepted (flat .npz or sharded manifest,
+    sniffed by `checkpoint.restore_any`), and neither records a mesh: a
+    grid saved from an 8-device run resumes on 4 devices, 1 device, or
+    the plain vmapped path bit-exactly — re-sharding is just
+    ``train_batched(init_state=..., mesh=...)`` on the new mesh."""
     like = batched_init_state(job, scenarios, seeds, megabatch=megabatch)
-    return ckpt_mod.restore(path, like)
+    return ckpt_mod.restore_any(path, like)
 
 
 def train_batched_durable(job: JobConfig,
@@ -478,7 +516,10 @@ def train_batched_durable(job: JobConfig,
                           n_batches: Optional[int] = None,
                           batch_fn: Optional[Callable[[int], Dict]] = None,
                           batch_seed: int = 0,
-                          resume: bool = True) -> engine.EngineResult:
+                          resume: bool = True,
+                          mesh=None,
+                          save_shards: Optional[int] = None,
+                          async_save: bool = False) -> engine.EngineResult:
     """Preemption-*durable* batched training: the scan executes in
     ``save_every``-tick jitted chunks on the host, persisting the full
     batched carry to ``checkpoint_path`` after every chunk — so a process
@@ -494,6 +535,15 @@ def train_batched_durable(job: JobConfig,
 
     Returns the final EngineResult — identical to the equivalent
     ``train_batched(job, scenarios, seeds, n_ticks=n_ticks)``.
+
+    ``mesh`` runs each chunk through `engine.simulate_sharded` (grid
+    sharded over the mesh, bit-exact). ``save_shards=n`` writes each
+    checkpoint as n per-shard files + manifest (`checkpoint.save_sharded`)
+    instead of one flat .npz; ``async_save=True`` hands serialization to
+    a background `AsyncCheckpointWriter` thread so the next chunk's scan
+    launches without waiting for disk — the last write is always joined
+    (and its errors surfaced) before the function returns. The loop never
+    donates the carry, so the enqueued snapshot stays consistent.
     """
     if save_every < 1:
         raise ValueError(f"save_every={save_every} must be ≥ 1")
@@ -511,23 +561,40 @@ def train_batched_durable(job: JobConfig,
     else:
         state, tick = batched_init_state(job, scenarios, seeds), 0
 
-    res = None
-    while tick < n_ticks:
-        step = min(save_every, n_ticks - tick)
-        cfg = engine.SimConfig(n_ticks=tick + step, snapshot_every=step)
-        res = engine.simulate_program(scenarios, program, None, data, seeds,
-                                      cfg, donate=False, init_state=state,
-                                      tick0=tick)
-        # the chunk's single snapshot IS its final carry — persist it
-        # before advancing (atomic write; a kill between chunks re-runs at
-        # most this chunk)
-        state, tick = engine.snapshot_state(res, -1)
-        ckpt_mod.save(checkpoint_path, state, tick)
-    if res is None:
-        # checkpoint already at n_ticks: materialize the result from the
-        # restored carry with a zero-tick call
-        res = engine.simulate_program(scenarios, program, None, data, seeds,
-                                      engine.SimConfig(n_ticks=n_ticks),
-                                      donate=False, init_state=state,
-                                      tick0=tick)
+    def run_chunk(cfg, state, tick):
+        if mesh is not None:
+            return engine.simulate_sharded(scenarios, program, None, data,
+                                           seeds, cfg, mesh=mesh,
+                                           donate=False, init_state=state,
+                                           tick0=tick)
+        return engine.simulate_program(scenarios, program, None, data,
+                                       seeds, cfg, donate=False,
+                                       init_state=state, tick0=tick)
+
+    writer = ckpt_mod.AsyncCheckpointWriter() if async_save else None
+    try:
+        res = None
+        while tick < n_ticks:
+            step = min(save_every, n_ticks - tick)
+            cfg = engine.SimConfig(n_ticks=tick + step, snapshot_every=step)
+            res = run_chunk(cfg, state, tick)
+            # the chunk's single snapshot IS its final carry — persist it
+            # before advancing (atomic write; a kill between chunks re-runs
+            # at most this chunk)
+            state, tick = engine.snapshot_state(res, -1)
+            if writer is not None:
+                writer.submit(checkpoint_path, state, tick,
+                              n_shards=save_shards)
+            elif save_shards:
+                ckpt_mod.save_sharded(checkpoint_path, state, tick,
+                                      save_shards)
+            else:
+                ckpt_mod.save(checkpoint_path, state, tick)
+        if res is None:
+            # checkpoint already at n_ticks: materialize the result from
+            # the restored carry with a zero-tick call
+            res = run_chunk(engine.SimConfig(n_ticks=n_ticks), state, tick)
+    finally:
+        if writer is not None:
+            writer.close()
     return res
