@@ -18,6 +18,9 @@ and step-microbenchmarks. Prints ``name,us_per_call,derived`` CSV rows.
           vs 1 device).
   multibid — K=1..5 bid levels (core.multibid.optimize_multibid) on the
           engine: expected vs simulated cost curve (beyond-paper §VII).
+  chaos — recovery overhead of the self-healing supervisor: the same
+          durable run unfailed vs under a seeded kill+corrupt fault plan
+          (restarts, ticks lost, MTTR, wall overhead %).
   roofline — per (arch × shape) dominant roofline term from the dry-run
           JSON (results/dryrun_singlepod.json), if present.
   steps — wall-time microbenchmarks of the elastic train/serve steps on
@@ -803,6 +806,54 @@ def bench_sharded():
              f"speedup_vs_d1={base_us / us:.2f}x")
 
 
+def bench_chaos():
+    """Recovery overhead of the supervised durable loop: one unfailed
+    supervised run vs the same workload under a seeded fault plan (a
+    mid-chunk SIGKILL plus a corrupted newest-step checkpoint). Both runs
+    share a jit cache-less cold start per attempt, so the overhead column
+    is the honest price of dying twice: restart latency + lost-chunk
+    recompute + fallback restore."""
+    import tempfile
+
+    from repro.chaos import Fault, FaultPlan
+    from repro.launch import supervisor as sup
+    from repro.launch.workload import WorkerSpec
+
+    n_ticks, save_every = (8, 4) if SMOKE else (24, 6)
+    spec = WorkerSpec(
+        overrides=dict(d_model=16, num_heads=2, num_kv_heads=1, d_ff=32,
+                       vocab_size=64, head_dim=8),
+        bids=((0.9, 0.9, 0.5, 0.5), (0.8, 0.8, 0.6, 0.6)),
+        seeds=2, n_ticks=n_ticks, save_every=save_every, keep_last=3)
+    plan = FaultPlan((Fault("kill", at_tick=max(1, n_ticks // 3)),
+                      Fault("corrupt", at_tick=max(2, 2 * n_ticks // 3),
+                            mode="truncate_shard")), seed=5)
+    cfg = dict(max_restarts=5, backoff_base=0.05, backoff_cap=0.5,
+               hang_timeout=600.0, seed=5)
+
+    def supervised(with_faults):
+        d = tempfile.mkdtemp(prefix="bench_chaos_")
+        spec.save(os.path.join(d, sup.SPEC_NAME))
+        if with_faults:
+            plan.save(os.path.join(d, sup.PLAN_NAME))
+        t0 = time.perf_counter()
+        summary = sup.Supervisor(
+            d, sup.SupervisorConfig(**cfg)).run()
+        if not summary["ok"]:
+            raise RuntimeError(f"supervised bench run failed: {summary}")
+        return summary, time.perf_counter() - t0
+
+    base, base_s = supervised(with_faults=False)
+    chaos, chaos_s = supervised(with_faults=True)
+    emit("chaos_baseline", base_s * 1e6,
+         f"n_ticks={n_ticks};save_every={save_every};"
+         f"restarts={base['restarts']}")
+    emit("chaos_recovery", chaos_s * 1e6,
+         f"restarts={chaos['restarts']};ticks_lost={chaos['ticks_lost']};"
+         f"mttr_s={chaos['mttr_s']:.2f};"
+         f"overhead_vs_unfailed_pct={(chaos_s / base_s - 1) * 100:.1f}")
+
+
 BENCHES = {
     "fig3": bench_fig3,
     "fig4": bench_fig4,
@@ -815,6 +866,7 @@ BENCHES = {
     "roofline": bench_roofline,
     "steps": bench_steps,
     "kernels": bench_kernels,
+    "chaos": bench_chaos,
 }
 
 

@@ -1,6 +1,6 @@
 #!/usr/bin/env bash
 # Tier-1 CI: fast test suite + a 5-scenario engine smoke sweep.
-# Run from anywhere: scripts/ci.sh [--smoke-bench] [--devices N]
+# Run from anywhere: scripts/ci.sh [--smoke-bench] [--devices N] [--chaos]
 #
 # --smoke-bench additionally runs every benchmark in --smoke mode (2-tick /
 # 2-seed budgets) so perf-path regressions — import errors, shape breaks,
@@ -12,15 +12,21 @@
 # (XLA_FLAGS=--xla_force_host_platform_device_count=N, set before any jax
 # import) so the `multidevice`-marked sharded tests run natively instead
 # of skipping.
+#
+# --chaos additionally runs the fast chaos-marked tests plus one supervised
+# end-to-end smoke: a durable run on forced host devices that survives a
+# mid-chunk SIGKILL and a corrupted newest checkpoint and still finishes.
 set -euo pipefail
 cd "$(dirname "$0")/.."
 export PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH}
 
 SMOKE_BENCH=0
 DEVICES=0
+CHAOS=0
 while [ "$#" -gt 0 ]; do
   case "$1" in
     --smoke-bench) SMOKE_BENCH=1; shift ;;
+    --chaos) CHAOS=1; shift ;;
     --devices)
       [ "$#" -ge 2 ] || { echo "--devices needs a count" >&2; exit 2; }
       DEVICES="$2"; shift 2 ;;
@@ -149,6 +155,38 @@ np.testing.assert_allclose(np.asarray(pk), np.asarray(pr), atol=1e-6)
 np.testing.assert_allclose(np.asarray(vk), np.asarray(vr), atol=1e-6)
 print("megabatch kernel-on smoke OK: fused step == inline step, "
       "Pallas(interpret) == ref on 3x517 @ block 128")
+PY
+fi
+
+if [ "$CHAOS" = 1 ]; then
+  echo "== chaos tests (fast subset) =="
+  python -m pytest -q -m "chaos and not slow"
+
+  echo "== chaos supervised smoke (kill + corrupt shard on 2 forced devices) =="
+  python - <<'PY'
+import json, os, tempfile
+from repro.chaos import Fault, FaultPlan
+from repro.launch import supervisor as sup
+from repro.launch.workload import WorkerSpec
+
+run_dir = tempfile.mkdtemp(prefix="ci_chaos_")
+WorkerSpec(
+    overrides=dict(d_model=16, num_heads=2, num_kv_heads=1, d_ff=32,
+                   vocab_size=64, head_dim=8),
+    bids=((0.9, 0.9, 0.5, 0.5), (0.8, 0.8, 0.6, 0.6)),
+    seeds=2, n_ticks=12, save_every=4, save_shards=2, keep_last=3,
+    mesh=2).save(os.path.join(run_dir, sup.SPEC_NAME))
+FaultPlan((Fault("kill", at_tick=5),
+           Fault("corrupt", at_tick=9, mode="truncate_shard")),
+          seed=3).save(os.path.join(run_dir, sup.PLAN_NAME))
+summary = sup.Supervisor(run_dir, sup.SupervisorConfig(
+    max_restarts=5, backoff_base=0.05, backoff_cap=0.5,
+    hang_timeout=600.0, devices=2, seed=3)).run()
+assert summary["ok"], summary
+assert summary["restarts"] == 2, summary
+assert summary["final_tick"] == 12, summary
+assert summary["ticks_lost"] <= 8, summary
+print("chaos smoke OK:", json.dumps(summary))
 PY
 fi
 echo "CI OK"

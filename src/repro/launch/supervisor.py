@@ -1,0 +1,478 @@
+"""Self-healing supervisor for durable batched training.
+
+The paper prices preemption of *simulated* spot workers; this module makes
+the training process itself survive being preempted. `Supervisor` runs the
+durable loop (`trainer.train_batched_durable`) in a worker subprocess and
+
+* watches a per-chunk heartbeat file — a crash is a dead child, a hang is
+  a live child whose heartbeat stopped advancing for ``hang_timeout``;
+* restarts with exponential backoff + seeded jitter under a
+  ``max_restarts`` budget, each restart auto-resuming from the newest
+  *valid* checkpoint (`checkpoint.restore_newest(strict=False)` inside the
+  worker quarantines corrupt step dirs and falls back);
+* degrades onto a smaller forced-device mesh when devices disappear
+  between restarts (a ``shrink`` fault, or ``degrade_after`` consecutive
+  no-progress failures) — PR 7's mesh-portable restore makes the resumed
+  run bit-exact at any width;
+* emits a structured recovery log (``recovery.json``): every spawn /
+  crash / hang / shrink / rollback event plus restarts, ticks lost, and
+  MTTR.
+
+Layout of a run directory::
+
+    run_dir/
+      spec.json            WorkerSpec (the workload, see launch/workload.py)
+      fault_plan.json      optional chaos.FaultPlan to inject
+      fired.json           fired-fault ledger (shared: worker + supervisor)
+      heartbeat.json       {"tick", "time", "pid", "phase"}, atomic
+      ckpt/step_*/         step-directory checkpoints (keep_last GC'd)
+      jax_cache/           persistent jit cache (restart compiles ~3x faster)
+      result.json          written by the worker on success
+      worker_events.jsonl  injected faults + NaN rollbacks, as they happen
+      attempt_{k}.log      worker stdout+stderr per attempt
+      recovery.json        the supervisor's structured recovery log
+
+Worker mode (``python -m repro.launch.supervisor --worker --run-dir D``)
+is what the supervisor spawns; running the module without ``--worker``
+supervises. `launch.train --supervise` builds the spec from its usual
+training flags and delegates here.
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import os
+import re
+import subprocess
+import sys
+import time
+from typing import List, Optional
+
+import numpy as np
+
+HEARTBEAT_NAME = "heartbeat.json"
+SPEC_NAME = "spec.json"
+PLAN_NAME = "fault_plan.json"
+LEDGER_NAME = "fired.json"
+RESULT_NAME = "result.json"
+RECOVERY_NAME = "recovery.json"
+EVENTS_NAME = "worker_events.jsonl"
+CKPT_DIRNAME = "ckpt"
+
+_FORCE_RE = re.compile(r"--xla_force_host_platform_device_count=\d+")
+
+
+# ---------------------------------------------------------------------------
+# Heartbeat file (written by the worker, polled by the supervisor)
+# ---------------------------------------------------------------------------
+
+
+def write_heartbeat(run_dir: str, tick: int, phase: str) -> None:
+    path = os.path.join(run_dir, HEARTBEAT_NAME)
+    tmp = path + ".tmp"
+    with open(tmp, "w") as f:
+        json.dump({"tick": int(tick), "time": time.time(),
+                   "pid": os.getpid(), "phase": phase}, f)
+    os.replace(tmp, path)
+
+
+def read_heartbeat(run_dir: str) -> Optional[dict]:
+    try:
+        with open(os.path.join(run_dir, HEARTBEAT_NAME)) as f:
+            return json.load(f)
+    except (OSError, ValueError):
+        return None
+
+
+class _Heartbeat:
+    """Chunk-hook adapter: every loop event refreshes the heartbeat.
+    ``before_save`` carries the *computed* tick, so the supervisor's
+    ticks-lost accounting sees work that died before its checkpoint."""
+
+    def __init__(self, run_dir: str):
+        self.run_dir = run_dir
+
+    def on_resume(self, tick, path):
+        write_heartbeat(self.run_dir, tick, "resume")
+
+    def before_chunk(self, tick, state):
+        write_heartbeat(self.run_dir, tick, "chunk")
+        return state
+
+    def before_save(self, tick):
+        write_heartbeat(self.run_dir, tick, "computed")
+
+    def after_save(self, tick, path):
+        write_heartbeat(self.run_dir, tick, "saved")
+
+
+class _CompositeHooks:
+    """Chains hook objects in order; ``before_chunk`` threads the carry
+    through each (heartbeat first, so an injected hang leaves a stale
+    heartbeat behind for the supervisor to time out on)."""
+
+    def __init__(self, *parts):
+        self.parts = [p for p in parts if p is not None]
+
+    def _fan(self, name, *args):
+        for p in self.parts:
+            fn = getattr(p, name, None)
+            if fn is not None:
+                fn(*args)
+
+    def on_resume(self, tick, path):
+        self._fan("on_resume", tick, path)
+
+    def before_chunk(self, tick, state):
+        for p in self.parts:
+            fn = getattr(p, "before_chunk", None)
+            if fn is not None:
+                out = fn(tick, state)
+                if out is not None:
+                    state = out
+        return state
+
+    def before_save(self, tick):
+        self._fan("before_save", tick)
+
+    def after_save(self, tick, path):
+        self._fan("after_save", tick, path)
+
+    def on_rollback(self, tick, reason):
+        self._fan("on_rollback", tick, reason)
+
+
+# ---------------------------------------------------------------------------
+# Worker: the supervised subprocess
+# ---------------------------------------------------------------------------
+
+
+class _JsonlEvents(list):
+    """Event list that also appends each entry to a .jsonl file the moment
+    it happens — so events survive the SIGKILL that often follows them."""
+
+    def __init__(self, path: str):
+        super().__init__()
+        self.path = path
+
+    def append(self, item):
+        super().append(item)
+        with open(self.path, "a") as f:
+            f.write(json.dumps(item) + "\n")
+
+
+def worker_main(run_dir: str) -> int:
+    """Run the spec'd durable training to completion inside ``run_dir``.
+    Exit 0 ⇔ the final checkpoint is at ``spec.n_ticks``."""
+    from repro.launch.workload import WorkerSpec, build_workload
+
+    spec = WorkerSpec.load(os.path.join(run_dir, SPEC_NAME))
+
+    import jax
+    if spec.jit_cache:
+        # restarts re-trace the same chunk programs; the persistent cache
+        # turns each restart's compile into a disk load
+        jax.config.update("jax_compilation_cache_dir",
+                          os.path.join(run_dir, "jax_cache"))
+        jax.config.update("jax_persistent_cache_min_compile_time_secs", 0)
+
+    from repro.train import trainer
+
+    job, scenarios, seeds = build_workload(spec)
+
+    mesh = None
+    if spec.mesh > 1 and jax.device_count() > 1:
+        from repro.launch.mesh import make_scenario_mesh
+        mesh = make_scenario_mesh(min(spec.mesh, jax.device_count()))
+
+    injector = None
+    plan_path = os.path.join(run_dir, PLAN_NAME)
+    if os.path.exists(plan_path):
+        from repro.chaos import FaultInjector, FaultLedger, FaultPlan
+        injector = FaultInjector(
+            FaultPlan.load(plan_path),
+            FaultLedger(os.path.join(run_dir, LEDGER_NAME)))
+        injector.events = _JsonlEvents(os.path.join(run_dir, EVENTS_NAME))
+
+    hooks = _CompositeHooks(_Heartbeat(run_dir), injector)
+    res = trainer.train_batched_durable(
+        job, scenarios, seeds,
+        checkpoint_path=os.path.join(run_dir, CKPT_DIRNAME),
+        save_every=spec.save_every, n_ticks=spec.n_ticks,
+        mesh=mesh, save_shards=spec.save_shards,
+        async_save=spec.async_save, keep_last=spec.keep_last,
+        strict_resume=False, nan_guard=True, hooks=hooks)
+
+    out = {"final_tick": spec.n_ticks,
+           "mesh_devices": int(jax.device_count()) if mesh is not None
+           else 0,
+           "total_cost": np.asarray(res.total_cost).tolist()}
+    tmp = os.path.join(run_dir, RESULT_NAME + ".tmp")
+    with open(tmp, "w") as f:
+        json.dump(out, f)
+    os.replace(tmp, os.path.join(run_dir, RESULT_NAME))
+    return 0
+
+
+# ---------------------------------------------------------------------------
+# Supervisor: spawn / watch / restart
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class SupervisorConfig:
+    max_restarts: int = 8          # restarts, not attempts (attempts = +1)
+    backoff_base: float = 0.5      # seconds; doubles per consecutive failure
+    backoff_cap: float = 30.0
+    jitter: float = 0.25           # ± fraction of the backoff, seeded
+    hang_timeout: float = 120.0    # stale-heartbeat seconds before SIGKILL
+    poll_interval: float = 0.25
+    devices: int = 0               # force N host devices in the child (0 =
+    #                                inherit whatever the child sees)
+    degrade_after: int = 2         # consecutive no-progress failures before
+    #                                halving the forced device count
+    seed: int = 0
+
+
+class Supervisor:
+    """Runs the worker to completion through crashes, hangs, corrupt
+    checkpoints, and shrinking fleets. `run()` returns the recovery
+    summary (also persisted to ``run_dir/recovery.json``)."""
+
+    def __init__(self, run_dir: str,
+                 config: Optional[SupervisorConfig] = None):
+        self.run_dir = run_dir
+        self.cfg = config or SupervisorConfig()
+        self.events: List[dict] = []
+        self._rng = np.random.default_rng(self.cfg.seed)
+
+    # ------------------------------------------------------------- plumbing
+
+    def _log(self, event: str, **kw) -> None:
+        self.events.append({"time": time.time(), "event": event, **kw})
+
+    def _child_env(self, devices: int) -> dict:
+        env = dict(os.environ)
+        src = os.path.dirname(os.path.dirname(os.path.dirname(
+            os.path.abspath(__file__))))
+        env["PYTHONPATH"] = src + os.pathsep + env.get("PYTHONPATH", "")
+        if devices > 0:
+            flags = _FORCE_RE.sub("", env.get("XLA_FLAGS", "")).strip()
+            env["XLA_FLAGS"] = (
+                flags + " " if flags else ""
+            ) + f"--xla_force_host_platform_device_count={devices}"
+        return env
+
+    def _spawn(self, attempt: int, devices: int) -> subprocess.Popen:
+        log = open(os.path.join(self.run_dir, f"attempt_{attempt}.log"),
+                   "w")
+        self._log("spawn", attempt=attempt, devices=devices)
+        return subprocess.Popen(
+            [sys.executable, "-m", "repro.launch.supervisor", "--worker",
+             "--run-dir", self.run_dir],
+            env=self._child_env(devices), stdout=log, stderr=log,
+            close_fds=True)
+
+    def _due_shrinks(self, restarts: int) -> List[int]:
+        """Unfired shrink faults due at or before restart number
+        ``restarts`` → their target device counts (ledger-marked here:
+        shrinks are supervisor faults, not worker faults)."""
+        plan_path = os.path.join(self.run_dir, PLAN_NAME)
+        if not os.path.exists(plan_path):
+            return []
+        from repro.chaos import FaultLedger, FaultPlan
+        plan = FaultPlan.load(plan_path)
+        ledger = FaultLedger(os.path.join(self.run_dir, LEDGER_NAME))
+        fired = ledger.fired()
+        out = []
+        for i, f in plan.by_kind("shrink"):
+            if i not in fired and f.at_restart <= restarts:
+                ledger.mark(i)
+                out.append(f.devices)
+                self._log("shrink", devices=f.devices, fault_index=i)
+        return out
+
+    def _backoff(self, consecutive_failures: int) -> float:
+        base = min(self.cfg.backoff_cap,
+                   self.cfg.backoff_base * 2 ** (consecutive_failures - 1))
+        return base * (1.0 + self.cfg.jitter
+                       * float(self._rng.uniform(-1.0, 1.0)))
+
+    # ------------------------------------------------------------ main loop
+
+    def run(self) -> dict:
+        cfg = self.cfg
+        devices = cfg.devices
+        restarts = 0
+        failures = 0               # consecutive, reset on progress
+        ticks_lost = 0
+        mttrs: List[float] = []
+        t0 = time.monotonic()
+        pending_recovery: Optional[float] = None   # monotonic failure time
+        pending_death_tick: Optional[int] = None   # resolved at next resume
+
+        while True:
+            for d in self._due_shrinks(restarts):
+                # a shrink can only take devices away, never give back
+                devices = d if devices <= 0 else min(devices, d)
+            attempt = restarts
+            child = self._spawn(attempt, devices)
+            hb0 = read_heartbeat(self.run_dir)
+            last_tick = hb0["tick"] if hb0 else 0
+            start_tick = last_tick
+            last_beat = time.monotonic()
+            reason = None
+
+            while True:
+                rc = child.poll()
+                hb = read_heartbeat(self.run_dir)
+                if hb is not None and (hb0 is None or hb != hb0):
+                    hb0 = hb
+                    last_beat = time.monotonic()
+                    if pending_recovery is not None:
+                        mttrs.append(time.monotonic() - pending_recovery)
+                        pending_recovery = None
+                    if pending_death_tick is not None:
+                        # first heartbeat after a failure carries the tick
+                        # the worker actually resumed from
+                        ticks_lost += max(0, pending_death_tick
+                                          - hb["tick"])
+                        pending_death_tick = None
+                    if hb["tick"] > last_tick:
+                        last_tick = hb["tick"]
+                        failures = 0
+                if rc is not None:
+                    if rc == 0:
+                        reason = "done"
+                    else:
+                        reason = f"crash (exit {rc})"
+                    break
+                if time.monotonic() - last_beat > cfg.hang_timeout:
+                    reason = f"hang (> {cfg.hang_timeout}s silent)"
+                    try:
+                        child.kill()
+                    except OSError:
+                        pass
+                    child.wait()
+                    break
+                time.sleep(cfg.poll_interval)
+
+            if reason == "done":
+                self._log("done", attempt=attempt, final_tick=last_tick)
+                break
+
+            failures += 1
+            death_tick = last_tick
+            if pending_death_tick is None:
+                pending_death_tick = death_tick
+            if pending_recovery is None:
+                pending_recovery = time.monotonic()
+            self._log("failure", attempt=attempt, reason=reason,
+                      death_tick=death_tick,
+                      progressed=death_tick > start_tick)
+
+            if restarts >= cfg.max_restarts:
+                self._log("gave_up", restarts=restarts)
+                break
+            if devices > 1 and failures > cfg.degrade_after:
+                # repeated failure without progress: assume the fleet is
+                # smaller than we think and degrade the forced mesh
+                devices = max(1, devices // 2)
+                self._log("degrade", devices=devices, failures=failures)
+            delay = self._backoff(failures)
+            self._log("restart", attempt=attempt + 1,
+                      backoff_s=round(delay, 3))
+            time.sleep(delay)
+            restarts += 1
+
+        if pending_death_tick is not None:
+            # gave up before any resume heartbeat: charge against disk
+            ticks_lost += max(0, pending_death_tick
+                              - self._last_valid_step())
+        ok = os.path.exists(os.path.join(self.run_dir, RESULT_NAME))
+        summary = {
+            "ok": ok,
+            "restarts": restarts,
+            "ticks_lost": int(ticks_lost),
+            "mttr_s": (float(np.mean(mttrs)) if mttrs else None),
+            "wall_s": time.monotonic() - t0,
+            "final_tick": int(self._last_valid_step()),
+            "devices": devices,
+        }
+        self._write_recovery(summary)
+        return summary
+
+    def _last_valid_step(self) -> int:
+        from repro.train import checkpoint as ckpt_mod
+        steps = ckpt_mod.list_steps(os.path.join(self.run_dir,
+                                                 CKPT_DIRNAME))
+        return steps[-1] if steps else 0
+
+    def _write_recovery(self, summary: dict) -> None:
+        worker_events = []
+        try:
+            with open(os.path.join(self.run_dir, EVENTS_NAME)) as f:
+                worker_events = [json.loads(line) for line in f
+                                 if line.strip()]
+        except OSError:
+            pass
+        doc = {"summary": summary, "events": self.events,
+               "worker_events": worker_events}
+        path = os.path.join(self.run_dir, RECOVERY_NAME)
+        with open(path + ".tmp", "w") as f:
+            json.dump(doc, f, indent=1)
+        os.replace(path + ".tmp", path)
+
+
+# ---------------------------------------------------------------------------
+# CLI
+# ---------------------------------------------------------------------------
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--run-dir", required=True)
+    ap.add_argument("--worker", action="store_true",
+                    help="run the workload itself (spawned by the "
+                         "supervisor; not for direct use)")
+    ap.add_argument("--spec", default=None,
+                    help="WorkerSpec JSON to copy into the run dir "
+                         "(supervisor mode; defaults to an existing "
+                         "run_dir/spec.json)")
+    ap.add_argument("--fault-plan", default=None,
+                    help="chaos FaultPlan JSON to inject")
+    ap.add_argument("--max-restarts", type=int, default=8)
+    ap.add_argument("--hang-timeout", type=float, default=120.0)
+    ap.add_argument("--backoff-base", type=float, default=0.5)
+    ap.add_argument("--devices", type=int, default=0,
+                    help="force N host devices in the worker (0 = inherit)")
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args(argv)
+
+    if args.worker:
+        return worker_main(args.run_dir)
+
+    os.makedirs(args.run_dir, exist_ok=True)
+    if args.spec:
+        from repro.launch.workload import WorkerSpec
+        WorkerSpec.load(args.spec).save(
+            os.path.join(args.run_dir, SPEC_NAME))
+    elif not os.path.exists(os.path.join(args.run_dir, SPEC_NAME)):
+        ap.error(f"no --spec and no {SPEC_NAME} in {args.run_dir}")
+    if args.fault_plan:
+        from repro.chaos import FaultPlan
+        FaultPlan.load(args.fault_plan).save(
+            os.path.join(args.run_dir, PLAN_NAME))
+
+    sup = Supervisor(args.run_dir, SupervisorConfig(
+        max_restarts=args.max_restarts, hang_timeout=args.hang_timeout,
+        backoff_base=args.backoff_base, devices=args.devices,
+        seed=args.seed))
+    summary = sup.run()
+    print(json.dumps(summary, indent=1))
+    return 0 if summary["ok"] else 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -51,6 +51,41 @@ def build_strategy(name, prob, eps, theta, n, dist, rt):
     raise ValueError(name)
 
 
+def supervise(args) -> int:
+    """--supervise: pin the workload as a WorkerSpec in the run dir and
+    hand it to the self-healing supervisor (launch/supervisor.py)."""
+    import os
+
+    from repro.launch import supervisor as sup_mod
+    from repro.launch.workload import WorkerSpec
+
+    # one two-bid fleet per strategy flavor: high/low split bids around
+    # the uniform price band, matching the paper's two-bid policies
+    n = args.workers
+    bids = tuple(tuple([hi] * (n // 2) + [lo] * (n - n // 2))
+                 for hi, lo in ((0.9, 0.5), (0.8, 0.6), (1.0, 0.4)))
+    spec = WorkerSpec(arch=args.arch, n_workers=n, seq_len=args.seq,
+                      global_batch=args.batch, bids=bids,
+                      iterations=args.iterations or 12,
+                      seeds=args.seeds, n_ticks=args.n_ticks,
+                      save_every=args.save_every,
+                      keep_last=args.keep_last,
+                      mesh=args.mesh or 0, seed=args.seed)
+    os.makedirs(args.run_dir, exist_ok=True)
+    spec.save(os.path.join(args.run_dir, sup_mod.SPEC_NAME))
+    if args.fault_plan:
+        from repro.chaos import FaultPlan
+        FaultPlan.load(args.fault_plan).save(
+            os.path.join(args.run_dir, sup_mod.PLAN_NAME))
+
+    sup = sup_mod.Supervisor(args.run_dir, sup_mod.SupervisorConfig(
+        max_restarts=args.max_restarts, hang_timeout=args.hang_timeout,
+        devices=args.devices, seed=args.seed))
+    summary = sup.run()
+    print(json.dumps(summary, indent=1))
+    return 0 if summary["ok"] else 1
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", choices=sorted(ARCHS), default="qwen2-7b")
@@ -91,7 +126,32 @@ def main():
                     help="additionally shard the seed/replica axis over M "
                          "devices (2-D N x M scenario x replica mesh; "
                          "requires --mesh)")
+    ap.add_argument("--supervise", action="store_true",
+                    help="run durable batched training under the "
+                         "self-healing supervisor (subprocess worker, "
+                         "heartbeat watchdog, restart-on-crash; requires "
+                         "--run-dir)")
+    ap.add_argument("--run-dir", default=None,
+                    help="supervisor run directory (spec, checkpoints, "
+                         "heartbeat, recovery log)")
+    ap.add_argument("--save-every", type=int, default=8,
+                    help="durable checkpoint cadence in ticks (--supervise)")
+    ap.add_argument("--n-ticks", type=int, default=64,
+                    help="market-tick budget of the durable run "
+                         "(--supervise)")
+    ap.add_argument("--keep-last", type=int, default=3,
+                    help="checkpoint steps retained by GC (--supervise)")
+    ap.add_argument("--fault-plan", default=None,
+                    help="chaos FaultPlan JSON to inject (--supervise)")
+    ap.add_argument("--max-restarts", type=int, default=8)
+    ap.add_argument("--hang-timeout", type=float, default=120.0)
+    ap.add_argument("--devices", type=int, default=0,
+                    help="force N host devices in the supervised worker")
     args = ap.parse_args()
+    if args.supervise:
+        if args.run_dir is None:
+            ap.error("--supervise requires --run-dir")
+        return supervise(args)
     if args.fused_update and not args.megabatch:
         ap.error("--fused-update requires --megabatch")
     if args.megabatch and not args.batched:
@@ -163,4 +223,5 @@ def main():
 
 
 if __name__ == "__main__":
-    main()
+    import sys
+    sys.exit(main())

@@ -13,14 +13,27 @@ import glob
 import json
 import os
 import queue
+import re
+import shutil
 import tempfile
 import threading
-from typing import Any, Optional, Tuple
+import time
+import zipfile
+import zlib
+from typing import Any, Callable, List, Optional, Tuple
 
 import jax
 import numpy as np
 
 SHARDED_FORMAT = "repro-sharded-checkpoint-v1"
+
+#: Optional write interposer for fault injection (chaos tests): when set,
+#: `_atomic_write` calls ``_write_hook(tmp_path, write_fn)`` instead of
+#: ``write_fn(tmp_path)``. The hook may raise (transient-IO faults) or
+#: write partially and kill the process (torn-write faults) — the tmp +
+#: rename protocol guarantees the destination is never half-written
+#: either way. Process-local; never set in production paths.
+_write_hook: Optional[Callable[[str, Callable[[str], None]], None]] = None
 
 
 class CheckpointError(ValueError):
@@ -47,7 +60,10 @@ def _atomic_write(path: str, write_fn, suffix: str = ".tmp.npz") -> None:
     fd, tmp = tempfile.mkstemp(dir=d, suffix=suffix)
     os.close(fd)
     try:
-        write_fn(tmp)
+        if _write_hook is not None:
+            _write_hook(tmp, write_fn)
+        else:
+            write_fn(tmp)
         os.replace(tmp, path)
     finally:
         if os.path.exists(tmp):
@@ -67,14 +83,21 @@ def restore(path: str, like: Any) -> Tuple[Any, int]:
 
     Structure drift between the checkpoint and the template — keys present
     in one but not the other — raises a ValueError naming the offending
-    keys instead of an opaque KeyError mid-unflatten."""
-    with np.load(path) as data:
-        if "__step__" not in data:
-            raise ValueError(f"{path} is not a repro checkpoint "
-                             "(missing __step__)")
-        step = int(data["__step__"])
-        tree = _fill_template(data, set(data.files) - {"__step__"},
-                              path, like)
+    keys instead of an opaque KeyError mid-unflatten. A file that cannot
+    be read as an .npz at all (truncated by a torn write, not a zip)
+    raises `CheckpointError` naming the path, never a bare zipfile
+    error."""
+    try:
+        with np.load(path) as data:
+            if "__step__" not in data:
+                raise ValueError(f"{path} is not a repro checkpoint "
+                                 "(missing __step__)")
+            step = int(data["__step__"])
+            tree = _fill_template(data, set(data.files) - {"__step__"},
+                                  path, like)
+    except (zipfile.BadZipFile, zlib.error, EOFError, OSError) as e:
+        raise CheckpointError(
+            f"{path} is not a readable checkpoint: {e}") from e
     return tree, step
 
 
@@ -202,7 +225,13 @@ def restore_sharded(path: str, like: Any) -> Tuple[Any, int]:
             raise CheckpointError(
                 f"shard {i} of checkpoint {path} is missing: "
                 f"{entry['file']} not found — refusing a partial restore")
-        with np.load(fname) as data:
+        try:
+            data_cm = np.load(fname)
+        except (zipfile.BadZipFile, zlib.error, EOFError, OSError) as e:
+            raise CheckpointError(
+                f"shard {i} ({entry['file']}) of checkpoint {path} is "
+                f"unreadable: {e}") from e
+        with data_cm as data:
             got = set(data.files)
             if got != set(keys):
                 raise CheckpointError(
@@ -240,8 +269,157 @@ def restore_any(path: str, like: Any) -> Tuple[Any, int]:
 
 
 # --------------------------------------------------------------------------
+# Step directories: one subdirectory per checkpointed tick, with retention,
+# corruption fallback and quarantine — the layout the self-healing
+# supervisor (launch/supervisor.py) resumes from
+# --------------------------------------------------------------------------
+
+_STEP_RE = re.compile(r"^step_(\d{8})$")
+QUARANTINE_DIRNAME = "quarantine"
+
+
+def step_dir(root: str, tick: int) -> str:
+    return os.path.join(root, f"step_{int(tick):08d}")
+
+
+def step_path(root: str, tick: int) -> str:
+    """The checkpoint file (flat .npz or sharded manifest) of one step."""
+    return os.path.join(step_dir(root, tick), "ckpt")
+
+
+def list_steps(root: str) -> List[int]:
+    """Ticks of the *complete* steps under `root`, ascending.
+
+    A step counts as complete only if its `ckpt` file exists — the file is
+    written last and atomically, so a step directory killed mid-save (only
+    shard files and/or `.tmp` leftovers inside) is invisible here and can
+    never shadow an older valid checkpoint."""
+    if not os.path.isdir(root):
+        return []
+    ticks = []
+    for name in os.listdir(root):
+        m = _STEP_RE.match(name)
+        if m and os.path.exists(os.path.join(root, name, "ckpt")):
+            ticks.append(int(m.group(1)))
+    return sorted(ticks)
+
+
+def save_step(root: str, state: Any, tick: int,
+              n_shards: Optional[int] = None,
+              keep_last: Optional[int] = None) -> str:
+    """Persist `state` as `root/step_<tick>/ckpt` (sharded when
+    `n_shards`). Stale ``.tmp`` leftovers from an earlier killed save of
+    the same step are swept first; with ``keep_last`` the oldest steps
+    beyond the n newest are deleted after the write lands (GC so long
+    supervised runs never fill the disk). Returns the checkpoint path."""
+    d = step_dir(root, tick)
+    os.makedirs(d, exist_ok=True)
+    for stale in glob.glob(os.path.join(glob.escape(d), "*.tmp*")):
+        os.unlink(stale)
+    path = step_path(root, tick)
+    if n_shards:
+        save_sharded(path, state, tick, n_shards)
+    else:
+        save(path, state, tick)
+    if keep_last:
+        prune_steps(root, keep_last)
+    return path
+
+
+def prune_steps(root: str, keep_last: int) -> List[int]:
+    """Delete all but the newest `keep_last` complete steps (and any
+    incomplete step directories older than the oldest kept tick).
+    Quarantined steps are never touched. Returns the removed ticks."""
+    if keep_last < 1:
+        raise ValueError(f"keep_last={keep_last} must be >= 1")
+    ticks = list_steps(root)
+    drop = ticks[:-keep_last] if len(ticks) > keep_last else []
+    for tick in drop:
+        shutil.rmtree(step_dir(root, tick), ignore_errors=True)
+    if ticks:
+        oldest_kept = ticks[-keep_last] if len(ticks) >= keep_last else \
+            ticks[0]
+        for name in os.listdir(root):
+            m = _STEP_RE.match(name)
+            if m and int(m.group(1)) < oldest_kept and \
+                    not os.path.exists(os.path.join(root, name, "ckpt")):
+                shutil.rmtree(os.path.join(root, name), ignore_errors=True)
+    return drop
+
+
+def quarantine_step(root: str, tick: int, reason: str = "") -> str:
+    """Move a corrupt step directory into `root/quarantine/` (never
+    deleted by GC, never considered by `list_steps`/`restore_newest`) and
+    record why. Returns the quarantine location."""
+    qroot = os.path.join(root, QUARANTINE_DIRNAME)
+    os.makedirs(qroot, exist_ok=True)
+    src = step_dir(root, tick)
+    dst = os.path.join(qroot, os.path.basename(src))
+    n = 0
+    while os.path.exists(dst):
+        n += 1
+        dst = os.path.join(qroot, f"{os.path.basename(src)}.{n}")
+    os.replace(src, dst)
+    with open(os.path.join(dst, "REASON.txt"), "w") as f:
+        f.write(reason or "corrupt checkpoint (unspecified)")
+    return dst
+
+
+def restore_newest(root: str, like: Any, strict: bool = True
+                   ) -> Tuple[Any, int, str]:
+    """Restore the newest valid step under `root` into `like`'s structure.
+    Returns ``(state, tick, path)`` — the tick actually used, which with
+    ``strict=False`` may be older than the newest on disk.
+
+    ``strict=True``: the newest complete step must restore cleanly, or a
+    `CheckpointError` propagates. ``strict=False``: a corrupt newest step
+    (truncated shard, torn manifest, template drift — anything
+    `restore_any` rejects) is *quarantined* and the previous step is
+    tried, falling back until a valid one restores; only when every step
+    is corrupt (or none exists) does it raise."""
+    ticks = list_steps(root)
+    if not ticks:
+        raise CheckpointError(f"no complete checkpoint steps under {root}")
+    errors = []
+    for tick in reversed(ticks):
+        path = step_path(root, tick)
+        try:
+            state, step = restore_any(path, like)
+            return state, step, path
+        except Exception as e:  # noqa: BLE001 — every failure mode of a
+            # corrupt file (CheckpointError, zipfile/np.load errors,
+            # template-drift ValueError) means "this step is unusable"
+            if strict:
+                raise CheckpointError(
+                    f"newest checkpoint step {tick} under {root} is "
+                    f"corrupt: {e}") from e
+            errors.append(f"step {tick}: {e}")
+            quarantine_step(root, tick, reason=str(e))
+    raise CheckpointError(
+        f"every checkpoint step under {root} is corrupt: "
+        f"{'; '.join(errors)}")
+
+
+# --------------------------------------------------------------------------
 # Async host offload: never stall the scan on checkpoint I/O
 # --------------------------------------------------------------------------
+
+
+def retry_io(fn: Callable, *args, retries: int = 3, backoff: float = 0.05,
+             sleep: Callable[[float], None] = time.sleep):
+    """Call ``fn(*args)``, retrying *transient* failures (`OSError`:
+    disk-full, EIO, a flaky network mount) up to `retries` times with
+    exponential backoff (``backoff * 2**attempt`` seconds). Anything
+    other than `OSError` — including `CheckpointError` — propagates
+    immediately: a volatile trainer should survive an I/O hiccup that
+    clears in milliseconds, not mask real corruption."""
+    for attempt in range(retries + 1):
+        try:
+            return fn(*args)
+        except OSError:
+            if attempt == retries:
+                raise
+            sleep(backoff * (2 ** attempt))
 
 
 class AsyncCheckpointWriter:
@@ -252,13 +430,24 @@ class AsyncCheckpointWriter:
     are immutable, so the enqueued state is a consistent snapshot even
     while the next chunk runs (callers must not donate the submitted
     buffers). Saves are written in submission order by a single daemon
-    thread; `wait()` blocks until the queue drains, and a failed save
-    re-raises from the next `submit`/`wait`/`close` so errors are never
-    silently dropped. Usable as a context manager."""
+    thread; `wait()` blocks until the queue drains. A failed save is
+    never silently dropped: the deferred error re-raises from the next
+    `submit`/`wait`, and — crucially for an error that lands *after the
+    last submit* — from `close()`/`__exit__`, which always drain the
+    queue and re-check before returning. Usable as a context manager.
 
-    def __init__(self):
+    Transient I/O errors (`OSError`: disk-full, EIO, a flaky network
+    mount) are retried up to `retries` times with exponential backoff
+    (`backoff * 2**attempt` seconds) before the error is recorded for
+    re-raise — a volatile trainer should not die to a hiccup that clears
+    in milliseconds. Non-OSError failures are never retried."""
+
+    def __init__(self, retries: int = 3, backoff: float = 0.05):
+        self.retries = int(retries)
+        self.backoff = float(backoff)
         self._q: queue.Queue = queue.Queue()
         self._error: Optional[BaseException] = None
+        self._sleep = time.sleep          # injectable for tests
         self._thread = threading.Thread(target=self._run, daemon=True)
         self._thread.start()
 
@@ -270,11 +459,15 @@ class AsyncCheckpointWriter:
                     return
                 fn, args = item
                 if self._error is None:
-                    fn(*args)
+                    self._call_with_retry(fn, args)
             except BaseException as e:  # noqa: BLE001 — deferred re-raise
                 self._error = e
             finally:
                 self._q.task_done()
+
+    def _call_with_retry(self, fn, args):
+        return retry_io(fn, *args, retries=self.retries,
+                        backoff=self.backoff, sleep=self._sleep)
 
     def _check(self):
         if self._error is not None:
@@ -291,13 +484,23 @@ class AsyncCheckpointWriter:
         else:
             self._q.put((save, (path, state, step)))
 
+    def submit_step(self, root: str, state: Any, tick: int,
+                    n_shards: Optional[int] = None,
+                    keep_last: Optional[int] = None) -> None:
+        """Enqueue a step-directory save (`save_step`, including its
+        `keep_last` GC) without waiting for the write."""
+        self._check()
+        self._q.put((save_step, (root, state, tick, n_shards, keep_last)))
+
     def wait(self) -> None:
         """Block until every submitted save has hit disk."""
         self._q.join()
         self._check()
 
     def close(self) -> None:
-        """Drain the queue and stop the thread. Idempotent."""
+        """Drain the queue, stop the thread, and re-raise any deferred
+        save error — including one raised by the final submitted save.
+        Idempotent."""
         if self._thread.is_alive():
             self._q.join()
             self._q.put(None)

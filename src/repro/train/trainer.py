@@ -506,6 +506,19 @@ def restore_batched(path: str, job: JobConfig,
     return ckpt_mod.restore_any(path, like)
 
 
+def state_is_finite(state: engine.SimState) -> bool:
+    """The in-scan NaN guard's predicate: every float leaf of the carry's
+    model, plus the cost/clock accumulators, is finite. (Trajectory
+    buffers are excluded — their not-yet-run entries are NaN by design.)"""
+    for leaf in jax.tree.leaves(state.model):
+        arr = np.asarray(leaf)
+        if np.issubdtype(arr.dtype, np.floating) and \
+                not np.isfinite(arr).all():
+            return False
+    return bool(np.isfinite(np.asarray(state.total_cost)).all()
+                and np.isfinite(np.asarray(state.t)).all())
+
+
 def train_batched_durable(job: JobConfig,
                           scenarios: Union[engine.ScenarioBatch,
                                            Sequence[engine.Scenario]],
@@ -519,7 +532,12 @@ def train_batched_durable(job: JobConfig,
                           resume: bool = True,
                           mesh=None,
                           save_shards: Optional[int] = None,
-                          async_save: bool = False) -> engine.EngineResult:
+                          async_save: bool = False,
+                          keep_last: Optional[int] = None,
+                          strict_resume: bool = True,
+                          nan_guard: bool = False,
+                          max_rollbacks: int = 3,
+                          hooks=None) -> engine.EngineResult:
     """Preemption-*durable* batched training: the scan executes in
     ``save_every``-tick jitted chunks on the host, persisting the full
     batched carry to ``checkpoint_path`` after every chunk — so a process
@@ -544,22 +562,56 @@ def train_batched_durable(job: JobConfig,
     launches without waiting for disk — the last write is always joined
     (and its errors surfaced) before the function returns. The loop never
     donates the carry, so the enqueued snapshot stays consistent.
+
+    ``keep_last=n`` switches checkpointing to *step-directory* mode:
+    ``checkpoint_path`` names a root directory holding one
+    ``step_{tick:08d}/`` per retained checkpoint (`checkpoint.save_step`),
+    GC'd to the newest n. Resume then goes through
+    `checkpoint.restore_newest` — with ``strict_resume=False`` a corrupt
+    newest step is quarantined and the previous valid one used instead,
+    so a torn write never bricks the run.
+
+    ``nan_guard=True`` validates the carry after every chunk
+    (`state_is_finite`): a non-finite model/cost rolls the carry back to
+    the chunk's start and re-runs it, never checkpointing poison; more
+    than ``max_rollbacks`` consecutive failures raise ``FloatingPointError``.
+
+    ``hooks`` is an optional object observing (and, for fault injection,
+    perturbing) the chunk loop; all methods are optional and resolved by
+    ``getattr``: ``on_resume(tick, path)``, ``before_chunk(tick, state)
+    -> state|None``, ``before_save(tick)``, ``after_save(tick, path)``,
+    ``on_rollback(tick, reason)``. `chaos.FaultInjector` implements this
+    protocol; the supervisor's heartbeat writer piggybacks on it too.
     """
     if save_every < 1:
         raise ValueError(f"save_every={save_every} must be ≥ 1")
+    if keep_last is not None and keep_last < 1:
+        raise ValueError(f"keep_last={keep_last} must be ≥ 1")
     scenarios, program, data, n_ticks = _prepare_batched(
         job, scenarios, n_ticks=n_ticks, n_batches=n_batches,
         batch_fn=batch_fn, batch_seed=batch_seed)
 
-    if resume and os.path.exists(checkpoint_path):
+    def hook(name, *args):
+        fn = getattr(hooks, name, None) if hooks is not None else None
+        return fn(*args) if fn is not None else None
+
+    step_mode = keep_last is not None
+    resumed_from = None
+    if resume and step_mode and ckpt_mod.list_steps(checkpoint_path):
+        like = batched_init_state(job, scenarios, seeds)
+        state, tick, resumed_from = ckpt_mod.restore_newest(
+            checkpoint_path, like, strict=strict_resume)
+    elif resume and not step_mode and os.path.exists(checkpoint_path):
         state, tick = restore_batched(checkpoint_path, job, scenarios,
                                       seeds)
-        if tick > n_ticks:
-            raise ValueError(
-                f"checkpoint {checkpoint_path} is at tick {tick}, beyond "
-                f"this run's n_ticks={n_ticks}")
+        resumed_from = checkpoint_path
     else:
         state, tick = batched_init_state(job, scenarios, seeds), 0
+    if tick > n_ticks:
+        raise ValueError(
+            f"checkpoint {resumed_from} is at tick {tick}, beyond "
+            f"this run's n_ticks={n_ticks}")
+    hook("on_resume", tick, resumed_from)
 
     def run_chunk(cfg, state, tick):
         if mesh is not None:
@@ -571,28 +623,71 @@ def train_batched_durable(job: JobConfig,
                                        seeds, cfg, donate=False,
                                        init_state=state, tick0=tick)
 
+    def save(state, tick):
+        # sync writes get the same transient-OSError retry the async
+        # writer applies — a disk hiccup should cost milliseconds, not
+        # a crash-and-restart cycle
+        if step_mode:
+            path = ckpt_mod.step_path(checkpoint_path, tick)
+            if writer is not None:
+                writer.submit_step(checkpoint_path, state, tick,
+                                   n_shards=save_shards,
+                                   keep_last=keep_last)
+            else:
+                ckpt_mod.retry_io(ckpt_mod.save_step, checkpoint_path,
+                                  state, tick, save_shards, keep_last)
+            return path
+        if writer is not None:
+            writer.submit(checkpoint_path, state, tick,
+                          n_shards=save_shards)
+        elif save_shards:
+            ckpt_mod.retry_io(ckpt_mod.save_sharded, checkpoint_path,
+                              state, tick, save_shards)
+        else:
+            ckpt_mod.retry_io(ckpt_mod.save, checkpoint_path, state, tick)
+        return checkpoint_path
+
+    has_after_save = hooks is not None and \
+        getattr(hooks, "after_save", None) is not None
     writer = ckpt_mod.AsyncCheckpointWriter() if async_save else None
+    rollbacks = 0
     try:
         res = None
         while tick < n_ticks:
+            clean_state = state          # pre-hook carry, the rollback point
+            hooked = hook("before_chunk", tick, state)
+            if hooked is not None:
+                state = hooked
             step = min(save_every, n_ticks - tick)
             cfg = engine.SimConfig(n_ticks=tick + step, snapshot_every=step)
             res = run_chunk(cfg, state, tick)
             # the chunk's single snapshot IS its final carry — persist it
             # before advancing (atomic write; a kill between chunks re-runs
             # at most this chunk)
-            state, tick = engine.snapshot_state(res, -1)
-            if writer is not None:
-                writer.submit(checkpoint_path, state, tick,
-                              n_shards=save_shards)
-            elif save_shards:
-                ckpt_mod.save_sharded(checkpoint_path, state, tick,
-                                      save_shards)
-            else:
-                ckpt_mod.save(checkpoint_path, state, tick)
+            new_state, new_tick = engine.snapshot_state(res, -1)
+            if nan_guard and not state_is_finite(new_state):
+                rollbacks += 1
+                hook("on_rollback", tick,
+                     f"non-finite carry after chunk ending at tick "
+                     f"{new_tick} (rollback {rollbacks}/{max_rollbacks})")
+                if rollbacks > max_rollbacks:
+                    raise FloatingPointError(
+                        f"carry still non-finite after {max_rollbacks} "
+                        f"rollbacks of the chunk starting at tick {tick}")
+                state, res = clean_state, None
+                continue
+            rollbacks = 0
+            state, tick = new_state, new_tick
+            hook("before_save", tick)
+            path = save(state, tick)
+            if has_after_save:
+                if writer is not None:
+                    writer.wait()        # hook must see the landed file
+                hook("after_save", tick, path)
         if res is None:
-            # checkpoint already at n_ticks: materialize the result from
-            # the restored carry with a zero-tick call
+            # checkpoint already at n_ticks (or the last chunk rolled
+            # back): materialize the result from the carry with a
+            # zero-tick call
             res = run_chunk(engine.SimConfig(n_ticks=n_ticks), state, tick)
     finally:
         if writer is not None:

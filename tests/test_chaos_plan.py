@@ -1,0 +1,222 @@
+"""Fault plans and their execution machinery (src/repro/chaos/): JSON
+round-trips, seeded determinism, checkpoint corruption that must surface
+as a named `CheckpointError`, transient-I/O injection against the
+writer's retry-with-backoff, and the fired-fault ledger that keeps a
+fault from firing twice across process restarts.
+"""
+import json
+import os
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.chaos import (CORRUPT_MODES, Fault, FaultInjector, FaultLedger,
+                         FaultPlan, FlakyIO, corrupt_checkpoint,
+                         poison_model)
+from repro.sim import engine
+from repro.train import checkpoint as ck
+
+
+def _state(rows=8):
+    return {"a": jnp.arange(rows * 2, dtype=jnp.float32).reshape(rows, 2),
+            "b": jnp.ones((rows, 3), jnp.float32)}
+
+
+def _like(rows=8):
+    return jax.tree.map(jnp.zeros_like, _state(rows))
+
+
+# ---------------------------------------------------------------------------
+# plan construction + JSON io
+# ---------------------------------------------------------------------------
+
+
+def test_plan_json_roundtrip(tmp_path):
+    plan = FaultPlan((Fault("kill", at_tick=10),
+                      Fault("corrupt", at_tick=16, mode="torn_manifest"),
+                      Fault("shrink", at_restart=1, devices=4),
+                      Fault("hang", at_tick=3, duration=42.0),
+                      Fault("io_error", at_tick=5, count=2)), seed=7)
+    p = str(tmp_path / "plan.json")
+    plan.save(p)
+    assert FaultPlan.load(p) == plan
+    # unused kind-specific fields are omitted from the JSON form
+    doc = json.loads(plan.to_json())
+    assert "mode" not in doc["faults"][0]
+    assert "at_tick" not in doc["faults"][2]
+
+
+def test_plan_rejects_wrong_format_and_bad_faults():
+    with pytest.raises(ValueError, match="repro-fault-plan"):
+        FaultPlan.from_json('{"faults": []}')
+    with pytest.raises(ValueError, match="unknown fault kind"):
+        Fault("meteor", at_tick=1)
+    with pytest.raises(ValueError, match="at_tick"):
+        Fault("kill")
+    with pytest.raises(ValueError, match="at_restart"):
+        Fault("shrink", devices=4)
+    with pytest.raises(ValueError, match="corrupt mode"):
+        Fault("corrupt", at_tick=1, mode="gamma_ray")
+
+
+def test_random_plan_is_seed_deterministic():
+    a = FaultPlan.random(seed=5, n_ticks=64, save_every=8, n_faults=6)
+    b = FaultPlan.random(seed=5, n_ticks=64, save_every=8, n_faults=6)
+    c = FaultPlan.random(seed=6, n_ticks=64, save_every=8, n_faults=6)
+    assert a == b
+    assert a != c
+    for f in a.faults:
+        if f.kind != "shrink":
+            assert 0 < f.at_tick < 64
+
+
+def test_by_kind_preserves_plan_indices():
+    plan = FaultPlan((Fault("kill", at_tick=1),
+                      Fault("shrink", at_restart=0, devices=2),
+                      Fault("kill", at_tick=9)))
+    assert plan.by_kind("kill") == [(0, plan.faults[0]),
+                                    (2, plan.faults[2])]
+
+
+# ---------------------------------------------------------------------------
+# checkpoint corruption → named CheckpointError on restore
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("n_shards", [None, 3])
+def test_truncate_shard_breaks_restore(tmp_path, n_shards):
+    p = str(tmp_path / "c.ckpt")
+    if n_shards:
+        ck.save_sharded(p, _state(), step=4, n_shards=n_shards)
+    else:
+        ck.save(p, _state(), step=4)
+    detail = corrupt_checkpoint(p, "truncate_shard",
+                                np.random.default_rng(0))
+    assert "truncated" in detail
+    with pytest.raises(ck.CheckpointError):
+        ck.restore_any(p, _like())
+
+
+def test_torn_manifest_breaks_restore(tmp_path):
+    p = str(tmp_path / "c.ckpt")
+    ck.save_sharded(p, _state(), step=4, n_shards=2)
+    corrupt_checkpoint(p, "torn_manifest")
+    with pytest.raises(ck.CheckpointError):
+        ck.restore_any(p, _like())
+
+
+def test_stale_tmp_is_harmless(tmp_path):
+    p = str(tmp_path / "c.ckpt")
+    ck.save_sharded(p, _state(), step=4, n_shards=2)
+    corrupt_checkpoint(p, "stale_tmp")
+    assert any(".tmp" in f for f in os.listdir(tmp_path))
+    got, step = ck.restore_any(p, _like())
+    assert step == 4
+    for x, y in zip(jax.tree.leaves(got), jax.tree.leaves(_state())):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
+# ---------------------------------------------------------------------------
+# transient I/O injection vs the writer's retry-with-backoff
+# ---------------------------------------------------------------------------
+
+
+def test_flaky_io_is_retried_by_sync_retry_io(tmp_path):
+    flaky = FlakyIO()
+    flaky.arm(2)          # two failing writes, then clean
+    try:
+        sleeps = []
+        ck.retry_io(ck.save, str(tmp_path / "x.npz"), _state(), 3,
+                    sleep=sleeps.append)
+        assert sleeps == [0.05, 0.1]          # backoff * 2**attempt
+        _, step = ck.restore_any(str(tmp_path / "x.npz"), _like())
+        assert step == 3
+        assert flaky.remaining == 0
+    finally:
+        flaky.disarm()
+
+
+def test_flaky_io_exhausts_retries(tmp_path):
+    flaky = FlakyIO()
+    flaky.arm(5)
+    try:
+        with pytest.raises(OSError, match="disk full"):
+            ck.retry_io(ck.save, str(tmp_path / "x.npz"), _state(), 3,
+                        retries=2, sleep=lambda s: None)
+        # retry_io consumed 1 + 2 retries of the 5 armed failures
+        assert flaky.remaining == 2
+    finally:
+        flaky.disarm()
+
+
+def test_async_writer_retries_transient_then_defers_fatal(tmp_path):
+    flaky = FlakyIO()
+    try:
+        with ck.AsyncCheckpointWriter(retries=3, backoff=0.0) as w:
+            flaky.arm(2)
+            w.submit(str(tmp_path / "x.npz"), _state(), 1)
+            w.wait()                          # retried through — no error
+            _, step = ck.restore_any(str(tmp_path / "x.npz"), _like())
+            assert step == 1
+        flaky.arm(10)                         # > retries: becomes deferred
+        w2 = ck.AsyncCheckpointWriter(retries=1, backoff=0.0)
+        w2.submit(str(tmp_path / "y.npz"), _state(), 2)
+        with pytest.raises(OSError, match="disk full"):
+            w2.close()                        # surfaces after last submit
+    finally:
+        flaky.disarm()
+
+
+# ---------------------------------------------------------------------------
+# ledger + injector semantics
+# ---------------------------------------------------------------------------
+
+
+def test_ledger_survives_garbage_and_marks_once(tmp_path):
+    led = FaultLedger(str(tmp_path / "fired.json"))
+    assert led.fired() == set()
+    led.mark(2)
+    led.mark(0)
+    led.mark(2)
+    assert led.fired() == {0, 2}
+    with open(led.path, "w") as f:
+        f.write("not json")
+    assert led.fired() == set()
+
+
+def test_injector_fires_each_fault_once_and_ledgers_first(tmp_path):
+    plan = FaultPlan((Fault("kill", at_tick=4),
+                      Fault("hang", at_tick=2, duration=7.0)))
+    led = FaultLedger(str(tmp_path / "fired.json"))
+    slept, died = [], []
+    inj = FaultInjector(plan, led, sleep=slept.append,
+                        die=lambda: died.append(True))
+    inj.before_chunk(0, None)
+    assert slept == [] and led.fired() == set()
+    inj.before_chunk(2, None)                 # hang due
+    assert slept == [7.0] and led.fired() == {1}
+    inj.before_save(5)                        # kill due (first tick >= 4)
+    assert died == [True] and led.fired() == {0, 1}
+    # a restarted injector sharing the ledger must not re-fire
+    inj2 = FaultInjector(plan, led, sleep=slept.append,
+                         die=lambda: died.append(True))
+    inj2.before_chunk(10, None)
+    inj2.before_save(10)
+    assert slept == [7.0] and died == [True]
+
+
+def test_poison_model_nans_only_float_leaves():
+    state = engine.SimState(
+        t=jnp.zeros(2), j=jnp.zeros(2, jnp.int32), bucket=jnp.zeros(2),
+        total_cost=jnp.zeros(2), total_idle=jnp.zeros(2),
+        model={"w": jnp.ones(3), "step": jnp.array([1, 2])},
+        err_traj=jnp.zeros((2, 4)), cost_traj=jnp.zeros((2, 4)),
+        time_traj=jnp.zeros((2, 4)), y_traj=jnp.zeros((2, 4)))
+    poisoned = poison_model(state)
+    assert np.isnan(np.asarray(poisoned.model["w"])).all()
+    np.testing.assert_array_equal(np.asarray(poisoned.model["step"]),
+                                  [1, 2])
+    np.testing.assert_array_equal(np.asarray(poisoned.t), 0.0)

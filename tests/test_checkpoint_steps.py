@@ -1,0 +1,197 @@
+"""Step-directory checkpointing (`checkpoint.save_step` /
+`restore_newest` / `prune_steps` / `quarantine_step`): retention GC,
+fallback past a corrupt newest step, and the atomicity guarantee under
+the worst possible timing — a writer SIGKILLed *mid-write*, at a
+randomized truncation offset, must never leave a ``.tmp`` that shadows
+a valid checkpoint, and the next run must resume bit-exactly from the
+prior step.
+"""
+import json
+import os
+import signal
+import subprocess
+import sys
+import tempfile
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.chaos import corrupt_checkpoint
+from repro.train import checkpoint as ck
+
+SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+
+
+def _state(rows=9, fill=0.0):
+    return {"a": jnp.arange(rows * 2, dtype=jnp.float32).reshape(rows, 2)
+            + fill,
+            "b": jnp.full((rows, 3), fill, jnp.float32)}
+
+
+def _like(rows=9):
+    return jax.tree.map(jnp.zeros_like, _state(rows))
+
+
+def _assert_tree_equal(a, b):
+    for x, y in zip(jax.tree.leaves(a), jax.tree.leaves(b)):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
+# ---------------------------------------------------------------------------
+# roundtrip + listing + GC
+# ---------------------------------------------------------------------------
+
+
+def test_step_roundtrip_and_listing(tmp_path):
+    root = str(tmp_path / "ckpt")
+    for tick in (4, 8, 12):
+        ck.save_step(root, _state(fill=float(tick)), tick)
+    assert ck.list_steps(root) == [4, 8, 12]
+    state, tick, path = ck.restore_newest(root, _like())
+    assert tick == 12 and path == ck.step_path(root, 12)
+    _assert_tree_equal(state, _state(fill=12.0))
+
+
+@pytest.mark.parametrize("n_shards", [None, 3])
+def test_keep_last_gc(tmp_path, n_shards):
+    root = str(tmp_path / "ckpt")
+    for tick in (2, 4, 6, 8):
+        ck.save_step(root, _state(fill=float(tick)), tick,
+                     n_shards=n_shards, keep_last=2)
+    assert ck.list_steps(root) == [6, 8]
+    assert not os.path.exists(ck.step_dir(root, 2))
+    state, tick, _ = ck.restore_newest(root, _like())
+    assert tick == 8
+    _assert_tree_equal(state, _state(fill=8.0))
+
+
+def test_incomplete_step_dir_is_invisible(tmp_path):
+    """A step dir without its manifest/ckpt file (a save that died before
+    the atomic rename) is not listed and not restored from."""
+    root = str(tmp_path / "ckpt")
+    ck.save_step(root, _state(fill=1.0), 4)
+    os.makedirs(ck.step_dir(root, 8))
+    with open(os.path.join(ck.step_dir(root, 8), "ckpt.tmp123"), "wb") as f:
+        f.write(b"garbage")
+    assert ck.list_steps(root) == [4]
+    _, tick, _ = ck.restore_newest(root, _like())
+    assert tick == 4
+
+
+# ---------------------------------------------------------------------------
+# strict vs fallback restore
+# ---------------------------------------------------------------------------
+
+
+def _two_steps_corrupt_newest(tmp_path, n_shards=2):
+    root = str(tmp_path / "ckpt")
+    ck.save_step(root, _state(fill=1.0), 8, n_shards=n_shards)
+    ck.save_step(root, _state(fill=2.0), 16, n_shards=n_shards)
+    corrupt_checkpoint(ck.step_path(root, 16), "truncate_shard",
+                       np.random.default_rng(1))
+    return root
+
+
+def test_strict_restore_raises_on_corrupt_newest(tmp_path):
+    root = _two_steps_corrupt_newest(tmp_path)
+    with pytest.raises(ck.CheckpointError):
+        ck.restore_newest(root, _like(), strict=True)
+    # strict never quarantines — the evidence stays in place
+    assert ck.list_steps(root) == [8, 16]
+
+
+def test_fallback_restore_quarantines_and_uses_previous(tmp_path):
+    root = _two_steps_corrupt_newest(tmp_path)
+    state, tick, path = ck.restore_newest(root, _like(), strict=False)
+    assert tick == 8
+    _assert_tree_equal(state, _state(fill=1.0))
+    assert ck.list_steps(root) == [8]
+    qdir = os.path.join(root, ck.QUARANTINE_DIRNAME)
+    assert any(d.startswith("step_00000016") for d in os.listdir(qdir))
+
+
+def test_all_corrupt_raises_named_error(tmp_path):
+    root = str(tmp_path / "ckpt")
+    ck.save_step(root, _state(), 8)
+    corrupt_checkpoint(ck.step_path(root, 8), "truncate_shard")
+    with pytest.raises(ck.CheckpointError, match="corrupt"):
+        ck.restore_newest(root, _like(), strict=False)
+    with pytest.raises(ck.CheckpointError, match="no complete checkpoint"):
+        ck.restore_newest(str(tmp_path / "empty"), _like(), strict=False)
+
+
+# ---------------------------------------------------------------------------
+# kill-during-save: SIGKILL mid-_atomic_write at a randomized offset
+# ---------------------------------------------------------------------------
+
+_KILLER_PY = r"""
+import os, signal, sys
+sys.path.insert(0, {src!r})
+import numpy as np
+import jax.numpy as jnp
+from repro.train import checkpoint as ck
+
+root, offset = {root!r}, {offset}
+state = {{"a": jnp.arange(18, dtype=jnp.float32).reshape(9, 2) + 2.0,
+          "b": jnp.full((9, 3), 2.0, jnp.float32)}}
+
+def killer_hook(tmp, write_fn):
+    write_fn(tmp)                       # the bytes land in the .tmp file…
+    size = os.path.getsize(tmp)
+    with open(tmp, "r+b") as f:        # …but only a prefix survives…
+        f.truncate(max(1, min(size - 1, offset)))
+    os.kill(os.getpid(), signal.SIGKILL)   # …and the rename never runs
+
+ck._write_hook = killer_hook
+ck.save_step(root, state, 16, n_shards={n_shards})
+"""
+
+
+@pytest.mark.parametrize("n_shards", [0, 2])
+def test_sigkill_mid_write_never_shadows_prior_step(n_shards):
+    """A writer SIGKILLed inside `_atomic_write` — after writing a random
+    prefix of the .tmp, before the rename — leaves step 16 invisible and
+    step 8 restorable bit-exactly, for flat and sharded formats alike."""
+    rng = np.random.default_rng(7)
+    for trial in range(3):
+        with tempfile.TemporaryDirectory() as d:
+            root = os.path.join(d, "ckpt")
+            ck.save_step(root, _state(fill=1.0), 8,
+                         n_shards=n_shards or None)
+            script = _KILLER_PY.format(
+                src=SRC, root=root, offset=int(rng.integers(1, 4096)),
+                n_shards=n_shards or None)
+            proc = subprocess.run([sys.executable, "-c", script],
+                                  capture_output=True, text=True,
+                                  timeout=120)
+            assert proc.returncode == -signal.SIGKILL, proc.stderr
+            # the torn write left debris but no visible step 16
+            assert ck.list_steps(root) == [8]
+            leftovers = os.listdir(ck.step_dir(root, 16))
+            assert leftovers and all(".tmp" in f for f in leftovers)
+            state, tick, _ = ck.restore_newest(root, _like(),
+                                               strict=False)
+            assert tick == 8
+            _assert_tree_equal(state, _state(fill=1.0))
+            # the next save of step 16 sweeps the stale tmp and lands
+            ck.save_step(root, _state(fill=3.0), 16,
+                         n_shards=n_shards or None)
+            assert not [f for f in os.listdir(ck.step_dir(root, 16))
+                        if ".tmp" in f]
+            state, tick, _ = ck.restore_newest(root, _like())
+            assert tick == 16
+            _assert_tree_equal(state, _state(fill=3.0))
+
+
+def test_prune_steps_validates_and_keeps_newest(tmp_path):
+    root = str(tmp_path / "ckpt")
+    with pytest.raises(ValueError):
+        ck.prune_steps(root, 0)
+    for tick in (1, 2, 3):
+        ck.save_step(root, _state(), tick)
+    removed = ck.prune_steps(root, 1)
+    assert removed == [1, 2]
+    assert ck.list_steps(root) == [3]

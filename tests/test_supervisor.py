@@ -1,0 +1,288 @@
+"""The self-healing supervisor (launch/supervisor.py): watchdog semantics
+on fake workers (crash accounting, hang detection, restart budget), and
+the end-to-end acceptance run — a seeded fault plan combining a mid-chunk
+SIGKILL, a corrupted newest-step shard, and an 8→4 device shrink, which
+the supervisor must ride out losing at most ``save_every`` ticks per
+fault, with the recovered final carry bit-exact against the unfailed
+in-process run.
+"""
+import json
+import os
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+
+import jax
+
+from repro.chaos import Fault, FaultPlan
+from repro.launch import supervisor as sup
+from repro.launch.workload import WorkerSpec, build_workload
+
+SAVE_EVERY = 6
+N_TICKS = 24
+
+
+def _tiny_spec(**kw):
+    base = dict(
+        overrides=dict(d_model=16, num_heads=2, num_kv_heads=1, d_ff=32,
+                       vocab_size=64, head_dim=8),
+        bids=((0.9, 0.9, 0.5, 0.5), (0.8, 0.8, 0.6, 0.6),
+              (1.0, 1.0, 0.4, 0.4), (0.7, 0.7, 0.7, 0.7)),
+        seeds=2, n_ticks=N_TICKS, save_every=SAVE_EVERY, keep_last=3)
+    base.update(kw)
+    return WorkerSpec(**base)
+
+
+# ---------------------------------------------------------------------------
+# watchdog semantics on fake workers (fast: no jax in the children)
+# ---------------------------------------------------------------------------
+
+_FAKE_PRELUDE = """
+import json, os, sys, time
+d = {run_dir!r}
+def beat(tick, phase):
+    tmp = os.path.join(d, "heartbeat.json.tmp")
+    with open(tmp, "w") as f:
+        json.dump({{"tick": tick, "time": time.time(), "pid": os.getpid(),
+                   "phase": phase}}, f)
+    os.replace(tmp, os.path.join(d, "heartbeat.json"))
+"""
+
+
+class _FakeSupervisor(sup.Supervisor):
+    """Spawns scripted stand-in children instead of the jax worker —
+    attempt k runs scripts[min(k, last)]."""
+
+    def __init__(self, run_dir, config, scripts):
+        super().__init__(run_dir, config)
+        self.scripts = scripts
+
+    def _spawn(self, attempt, devices):
+        self._log("spawn", attempt=attempt, devices=devices)
+        body = self.scripts[min(attempt, len(self.scripts) - 1)]
+        code = _FAKE_PRELUDE.format(run_dir=self.run_dir) + body
+        return subprocess.Popen([sys.executable, "-c", code],
+                                stdout=subprocess.DEVNULL,
+                                stderr=subprocess.DEVNULL)
+
+
+def _fast_cfg(**kw):
+    base = dict(max_restarts=4, backoff_base=0.01, backoff_cap=0.05,
+                jitter=0.0, hang_timeout=30.0, poll_interval=0.05)
+    base.update(kw)
+    return sup.SupervisorConfig(**base)
+
+
+def test_crash_restart_and_ticks_lost_accounting(tmp_path):
+    """A worker that dies at tick 5 and resumes at tick 0 costs 5 ticks;
+    the summary and event log record the crash, the restart, and the
+    recovery."""
+    d = str(tmp_path)
+    scripts = [
+        'beat(5, "computed"); sys.exit(1)',
+        # spaced beyond the poll interval so the supervisor observes the
+        # resume tick before the next beat overwrites it
+        'beat(0, "resume"); time.sleep(0.3); beat(9, "saved");\n'
+        'open(os.path.join(d, "result.json"), "w").write("{}");\n'
+        'sys.exit(0)',
+    ]
+    s = _FakeSupervisor(d, _fast_cfg(), scripts)
+    summary = s.run()
+    assert summary["ok"] and summary["restarts"] == 1
+    assert summary["ticks_lost"] == 5
+    assert summary["mttr_s"] is not None
+    kinds = [e["event"] for e in s.events]
+    assert kinds == ["spawn", "failure", "restart", "spawn", "done"]
+    rec = json.load(open(os.path.join(d, sup.RECOVERY_NAME)))
+    assert rec["summary"]["restarts"] == 1
+
+
+def test_hang_is_detected_and_killed(tmp_path):
+    """A live child whose heartbeat never advances is SIGKILLed after
+    ``hang_timeout`` and counted as a failure."""
+    d = str(tmp_path)
+    scripts = [
+        'beat(3, "chunk"); time.sleep(300)',
+        'beat(3, "resume");\n'
+        'open(os.path.join(d, "result.json"), "w").write("{}");\n'
+        'sys.exit(0)',
+    ]
+    s = _FakeSupervisor(d, _fast_cfg(hang_timeout=0.8), scripts)
+    summary = s.run()
+    assert summary["ok"] and summary["restarts"] == 1
+    failure = [e for e in s.events if e["event"] == "failure"][0]
+    assert "hang" in failure["reason"]
+
+
+def test_restart_budget_gives_up(tmp_path):
+    d = str(tmp_path)
+    s = _FakeSupervisor(d, _fast_cfg(max_restarts=2), ["sys.exit(3)"])
+    summary = s.run()
+    assert not summary["ok"]
+    assert summary["restarts"] == 2
+    assert [e["event"] for e in s.events].count("spawn") == 3
+    assert s.events[-1]["event"] == "gave_up"
+
+
+def test_no_progress_failures_degrade_devices(tmp_path):
+    """Repeated crashes without a tick of progress halve the forced
+    device count (the fleet is smaller than we think)."""
+    d = str(tmp_path)
+    s = _FakeSupervisor(d, _fast_cfg(max_restarts=3, devices=8,
+                                     degrade_after=1), ["sys.exit(1)"])
+    summary = s.run()
+    assert not summary["ok"]
+    degrades = [e["devices"] for e in s.events if e["event"] == "degrade"]
+    assert degrades == [4, 2]
+    assert summary["devices"] == 2
+
+
+def test_child_env_forces_devices_and_preserves_flags(tmp_path, monkeypatch):
+    monkeypatch.setenv(
+        "XLA_FLAGS",
+        "--xla_cpu_foo --xla_force_host_platform_device_count=16")
+    s = sup.Supervisor(str(tmp_path), sup.SupervisorConfig())
+    env = s._child_env(devices=4)
+    assert env["XLA_FLAGS"].count("force_host_platform_device_count") == 1
+    assert "--xla_force_host_platform_device_count=4" in env["XLA_FLAGS"]
+    assert "--xla_cpu_foo" in env["XLA_FLAGS"]
+    assert any(p.endswith("src") for p in
+               env["PYTHONPATH"].split(os.pathsep))
+    env = s._child_env(devices=0)
+    assert "device_count=4" not in env.get("XLA_FLAGS", "")
+
+
+def test_shrink_faults_fire_once_per_ledger(tmp_path):
+    d = str(tmp_path)
+    FaultPlan((Fault("shrink", at_restart=0, devices=4),
+               Fault("shrink", at_restart=2, devices=2))).save(
+        os.path.join(d, sup.PLAN_NAME))
+    s = sup.Supervisor(d, sup.SupervisorConfig())
+    assert s._due_shrinks(0) == [4]
+    assert s._due_shrinks(0) == []          # ledgered: never re-fires
+    assert s._due_shrinks(1) == []
+    assert s._due_shrinks(2) == [2]
+
+
+# ---------------------------------------------------------------------------
+# in-process durable loop under injection: NaN rollback never reaches disk
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.chaos
+@pytest.mark.slow
+def test_nan_guard_rolls_back_and_stays_bitexact(tmp_path):
+    from repro.chaos import FaultInjector, FaultLedger
+    from repro.train import checkpoint as ck
+    from repro.train import trainer
+
+    spec = _tiny_spec(bids=((0.9, 0.9, 0.5, 0.5), (0.8, 0.8, 0.6, 0.6)),
+                      n_ticks=12, save_every=4, keep_last=2)
+    job, scenarios, seeds = build_workload(spec)
+    root = str(tmp_path / "ckpt")
+    plan = FaultPlan((Fault("nan", at_tick=4),
+                      Fault("io_error", at_tick=8, count=2)), seed=3)
+    inj = FaultInjector(plan, FaultLedger(str(tmp_path / "fired.json")))
+    res = trainer.train_batched_durable(
+        job, scenarios, seeds, checkpoint_path=root,
+        save_every=spec.save_every, n_ticks=spec.n_ticks,
+        keep_last=spec.keep_last, strict_resume=False, nan_guard=True,
+        hooks=inj)
+    kinds = [e["fault"] for e in inj.events]
+    assert kinds == ["nan", "rollback", "io_error"]
+    # the poisoned chunk was re-run, never persisted: every retained
+    # step restores finite, and the final result matches the unfailed run
+    like = trainer.batched_init_state(job, scenarios, seeds)
+    for tick in ck.list_steps(root):
+        state, _ = ck.restore_any(ck.step_path(root, tick), like)
+        assert trainer.state_is_finite(state)
+    ref = trainer.train_batched(job, scenarios, seeds,
+                                n_ticks=spec.n_ticks)
+    for a, b in zip(jax.tree.leaves(res.final_model),
+                    jax.tree.leaves(ref.final_model)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    np.testing.assert_array_equal(np.asarray(res.total_cost),
+                                  np.asarray(ref.total_cost))
+
+
+@pytest.mark.chaos
+def test_nan_guard_raises_after_rollback_budget(tmp_path):
+    """A hook that re-poisons the carry on every chunk exhausts
+    ``max_rollbacks`` and raises instead of spinning forever."""
+    from repro.chaos import poison_model
+    from repro.train import trainer
+
+    spec = _tiny_spec(bids=((0.9, 0.9, 0.5, 0.5),), seeds=1, n_ticks=4,
+                      save_every=4, keep_last=1)
+    job, scenarios, seeds = build_workload(spec)
+
+    class AlwaysPoison:
+        def before_chunk(self, tick, state):
+            return poison_model(state)
+
+    with pytest.raises(FloatingPointError, match="non-finite"):
+        trainer.train_batched_durable(
+            job, scenarios, seeds,
+            checkpoint_path=str(tmp_path / "ckpt"), save_every=4,
+            n_ticks=4, keep_last=1, nan_guard=True, max_rollbacks=2,
+            hooks=AlwaysPoison())
+
+
+# ---------------------------------------------------------------------------
+# acceptance: kill + corrupt shard + 8→4 shrink, bit-exact recovery
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.chaos
+@pytest.mark.slow
+def test_supervisor_survives_kill_corrupt_and_shrink(tmp_path):
+    """The ISSUE's pinned scenario: under a seeded plan combining a
+    mid-chunk SIGKILL, one corrupted newest-step shard, and an 8→4
+    device shrink, the supervised run completes, loses at most
+    ``save_every`` ticks per fault, and its final carry is bit-exact
+    with the unfailed in-process run."""
+    from repro.sim import engine
+    from repro.train import checkpoint as ck
+    from repro.train import trainer
+
+    d = str(tmp_path)
+    spec = _tiny_spec(mesh=8, save_shards=2)
+    spec.save(os.path.join(d, sup.SPEC_NAME))
+    plan = FaultPlan((Fault("kill", at_tick=10),
+                      Fault("corrupt", at_tick=16, mode="truncate_shard"),
+                      Fault("shrink", at_restart=2, devices=4)), seed=11)
+    plan.save(os.path.join(d, sup.PLAN_NAME))
+
+    s = sup.Supervisor(d, sup.SupervisorConfig(
+        max_restarts=6, backoff_base=0.05, backoff_cap=0.5,
+        hang_timeout=600.0, devices=8, seed=11))
+    summary = s.run()
+
+    assert summary["ok"], summary
+    assert summary["final_tick"] == N_TICKS
+    # one restart per dying fault (kill, corrupt); the shrink rides the
+    # second restart
+    assert summary["restarts"] == 2
+    assert summary["ticks_lost"] <= 2 * SAVE_EVERY
+    assert summary["devices"] == 4
+    fired = [w["fault"] for w in json.load(
+        open(os.path.join(d, sup.RECOVERY_NAME)))["worker_events"]]
+    assert fired == ["kill", "corrupt"]
+    # the torn step is quarantined, not deleted
+    qdir = os.path.join(d, sup.CKPT_DIRNAME, ck.QUARANTINE_DIRNAME)
+    assert os.path.isdir(qdir) and os.listdir(qdir)
+
+    # recovered final carry == unfailed single-process run, every leaf
+    job, scenarios, seeds = build_workload(spec)
+    like = trainer.batched_init_state(job, scenarios, seeds)
+    state, tick, _ = ck.restore_newest(
+        os.path.join(d, sup.CKPT_DIRNAME), like)
+    assert tick == N_TICKS
+    ref = trainer.train_batched(job, scenarios, seeds, n_ticks=N_TICKS,
+                                snapshot_every=N_TICKS, donate=False)
+    ref_state, ref_tick = engine.snapshot_state(ref, -1)
+    assert ref_tick == N_TICKS
+    for a, b in zip(jax.tree.leaves(state), jax.tree.leaves(ref_state)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
