@@ -16,6 +16,9 @@ and step-microbenchmarks. Prints ``name,us_per_call,derived`` CSV rows.
   sharded — engine ticks/sec under `simulate_sharded` at 1/2/4/8 forced
           host devices (subprocess per count; cell-ticks/sec + speedup
           vs 1 device).
+  serve — rolling-horizon bidding service (service.server) at 1/2/4
+          forced host devices: replan latency p50/p95, decisions/sec,
+          and per-job regret vs hindsight / best static paper plan.
   multibid — K=1..5 bid levels (core.multibid.optimize_multibid) on the
           engine: expected vs simulated cost curve (beyond-paper §VII).
   chaos — recovery overhead of the self-healing supervisor: the same
@@ -806,6 +809,100 @@ def bench_sharded():
              f"speedup_vs_d1={base_us / us:.2f}x")
 
 
+_SERVE_BENCH_SCRIPT = r"""
+import os, sys
+n_dev = int(sys.argv[1])
+os.environ["XLA_FLAGS"] = ("--xla_force_host_platform_device_count="
+                           + sys.argv[1])
+import json, time
+import jax
+if jax.device_count() < n_dev:
+    print("RESULT " + json.dumps({"skip": jax.device_count()}))
+    raise SystemExit(0)
+
+from repro.core.cost_model import RuntimeModel
+from repro.launch.mesh import make_scenario_mesh
+from repro.service import BidServer, JobSpec, ServeConfig, synthetic_feed
+from repro.service.server import demo_problem
+
+ticks, horizon, warmup, score_ticks = (int(x) for x in sys.argv[2:6])
+quad, w0, prob = demo_problem(seed=0)
+feed = synthetic_feed(n_markets=2, n_ticks=ticks, seed=3)
+jobs = [JobSpec(name=f"job{i}", market=i % 2, eps=0.5, theta=60.0,
+                n_workers=4) for i in range(2)]
+cfg = ServeConfig(horizon=horizon, warmup=warmup, score_seeds=2, seed=0,
+                  batch=4, idle_step=0.25, multibid_partitions=((2, 2),),
+                  score_ticks=score_ticks or None)
+mesh = make_scenario_mesh(n_dev) if n_dev > 1 else None
+t0 = time.perf_counter()
+rep = BidServer(feed, jobs, prob=prob, quad=quad, w0=w0, alpha=prob.alpha,
+                rt_true=RuntimeModel(kind="exp", lam=2.0, delta=0.05),
+                cfg=cfg, mesh=mesh).run()
+wall = time.perf_counter() - t0
+s = rep["summary"]
+out = {"wall_s": wall, "replan_p50_ms": s["replan_p50_ms"],
+       "replan_p95_ms": s["replan_p95_ms"],
+       "decisions_per_sec": s["decisions_per_sec"],
+       "decisions": s["decisions"],
+       "completed": sum(j["completed"] for j in s["jobs"].values()),
+       "jobs": {name: {k: j[k] for k in
+                       ("cost", "regret_vs_hindsight",
+                        "regret_vs_static_paper")}
+                for name, j in s["jobs"].items()}}
+print("RESULT " + json.dumps(out))
+"""
+
+
+def bench_serve():
+    """Rolling-horizon bidding service throughput at 1/2/4 forced host
+    devices (subprocess per count; d1 scores candidates vmapped, d>1
+    shards scoring over a `make_scenario_mesh` — bit-exact either way,
+    see tests/test_serve.py). Derived columns report replan latency
+    p50/p95, decisions/sec, and — from the 1-device run — each job's
+    regret vs the hindsight-optimal static bid and vs the best static
+    paper plan. The 1-core CI box shares one core across the virtual
+    devices, so ~flat scaling is the honest expectation there."""
+    import subprocess
+    import sys
+
+    ticks, horizon, warmup, score_ticks = \
+        (24, 8, 8, 16) if SMOKE else (120, 24, 24, 0)
+    counts = [1] if SMOKE else [1, 2, 4]
+    src = os.path.join(os.path.dirname(__file__), "..", "src")
+    env = dict(os.environ)
+    env["PYTHONPATH"] = src + (os.pathsep + env["PYTHONPATH"]
+                               if "PYTHONPATH" in env else "")
+    env.pop("XLA_FLAGS", None)
+    for n_dev in counts:
+        out = subprocess.run(
+            [sys.executable, "-c", _SERVE_BENCH_SCRIPT, str(n_dev),
+             str(ticks), str(horizon), str(warmup), str(score_ticks)],
+            env=env, capture_output=True, text=True, timeout=900)
+        if out.returncode != 0:
+            raise RuntimeError(f"serve bench subprocess (d={n_dev}) "
+                               f"failed:\n{out.stderr[-2000:]}")
+        line = [l for l in out.stdout.splitlines()
+                if l.startswith("RESULT ")][-1]
+        rec = json.loads(line[len("RESULT "):])
+        if "skip" in rec:
+            emit(f"serve_d{n_dev}", 0.0,
+                 f"skipped;only_{rec['skip']}_devices")
+            continue
+        emit(f"serve_d{n_dev}", rec["wall_s"] * 1e6,
+             f"decisions={rec['decisions']};"
+             f"replan_p50_ms={rec['replan_p50_ms']};"
+             f"replan_p95_ms={rec['replan_p95_ms']};"
+             f"decisions_per_sec={rec['decisions_per_sec']};"
+             f"jobs_completed={rec['completed']}/2")
+        if n_dev == 1:
+            for name, j in rec["jobs"].items():
+                emit(f"serve_regret_{name}", 0.0,
+                     f"cost={j['cost']};"
+                     f"regret_vs_hindsight={j['regret_vs_hindsight']};"
+                     f"regret_vs_static_paper="
+                     f"{j['regret_vs_static_paper']}")
+
+
 def bench_chaos():
     """Recovery overhead of the supervised durable loop: one unfailed
     supervised run vs the same workload under a seeded fault plan (a
@@ -862,6 +959,7 @@ BENCHES = {
     "scenarios": bench_scenarios,
     "trainer": bench_trainer,
     "sharded": bench_sharded,
+    "serve": bench_serve,
     "multibid": bench_multibid,
     "roofline": bench_roofline,
     "steps": bench_steps,

@@ -1,6 +1,7 @@
 #!/usr/bin/env bash
 # Tier-1 CI: fast test suite + a 5-scenario engine smoke sweep.
 # Run from anywhere: scripts/ci.sh [--smoke-bench] [--devices N] [--chaos]
+#                                   [--serve-smoke]
 #
 # --smoke-bench additionally runs every benchmark in --smoke mode (2-tick /
 # 2-seed budgets) so perf-path regressions — import errors, shape breaks,
@@ -16,6 +17,10 @@
 # --chaos additionally runs the fast chaos-marked tests plus one supervised
 # end-to-end smoke: a durable run on forced host devices that survives a
 # mid-chunk SIGKILL and a corrupted newest checkpoint and still finishes.
+#
+# --serve-smoke additionally runs the fast serve-marked tests (the
+# rolling-horizon bidding service: stream -> posterior -> batched replan)
+# plus the serve benchmark in --smoke mode.
 set -euo pipefail
 cd "$(dirname "$0")/.."
 export PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH}
@@ -23,10 +28,12 @@ export PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH}
 SMOKE_BENCH=0
 DEVICES=0
 CHAOS=0
+SERVE=0
 while [ "$#" -gt 0 ]; do
   case "$1" in
     --smoke-bench) SMOKE_BENCH=1; shift ;;
     --chaos) CHAOS=1; shift ;;
+    --serve-smoke) SERVE=1; shift ;;
     --devices)
       [ "$#" -ge 2 ] || { echo "--devices needs a count" >&2; exit 2; }
       DEVICES="$2"; shift 2 ;;
@@ -188,5 +195,13 @@ assert summary["final_tick"] == 12, summary
 assert summary["ticks_lost"] <= 8, summary
 print("chaos smoke OK:", json.dumps(summary))
 PY
+fi
+
+if [ "$SERVE" = 1 ]; then
+  echo "== serve tests (fast subset) =="
+  python -m pytest -q -m "serve and not slow"
+
+  echo "== serve benchmark smoke (replayed feed, tiny budgets) =="
+  python -m benchmarks.run --only serve --smoke
 fi
 echo "CI OK"

@@ -13,6 +13,37 @@ from repro.core import preemption
 from repro.core.cost_model import PriceDist, RuntimeModel
 
 
+class DegeneratePriceError(ValueError):
+    """The price distribution cannot support bid optimization: its support
+    is (effectively) a single point, so Theorem 2/3's interior segments have
+    zero width, the trapezoid cost integrals collapse to 0, and the
+    "optimal" plan would be NaN/garbage. Callers should fall back to
+    ``no_interruption_bid`` (bid the max price), which stays well-defined —
+    the online planner does exactly that during warm-up, before the
+    posterior has seen more than one distinct price."""
+
+
+def ensure_optimizable(dist: PriceDist, tol: float = 1e-9) -> None:
+    """Raise ``DegeneratePriceError`` if ``dist`` is too degenerate for the
+    two-bid optimizers (zero-width support, or an empirical trace with a
+    single distinct value)."""
+    lo, hi = float(dist.lo), float(dist.hi)
+    if not (math.isfinite(lo) and math.isfinite(hi)):
+        raise DegeneratePriceError(
+            f"price support [{lo}, {hi}] is not finite")
+    if hi - lo <= tol * max(1.0, abs(hi)):
+        raise DegeneratePriceError(
+            f"price support [{lo}, {hi}] has zero width — a single support "
+            "point admits no bid trade-off")
+    samples = getattr(dist, "samples", None)
+    if samples is not None:
+        vals = np.unique(np.asarray(samples, float))
+        if len(vals) < 2:
+            raise DegeneratePriceError(
+                "empirical price trace has a single distinct value "
+                f"({vals[0]:.4g}); every candidate bid is equivalent")
+
+
 @dataclasses.dataclass(frozen=True)
 class BidPlan:
     """A resolved bidding plan for a job."""
@@ -111,6 +142,7 @@ def optimal_two_bids(prob: conv.SGDProblem, eps: float, theta: float,
     Preconditions (as in the theorem): 1/n < Q(ε) ≤ 1/n1 and
     θ ≥ J·E[R(n)] (feasible deadline).
     """
+    ensure_optimizable(dist)
     Q = conv.q_eps(prob, J, eps)
     if not (1.0 / n < Q):
         raise ValueError(f"Q(ε)={Q:.4g} ≤ 1/n; even all-active workers "
@@ -135,6 +167,7 @@ def co_optimize_two_bids(prob: conv.SGDProblem, eps: float, theta: float,
     """Co-optimize (J, n1, b⃗): sweep J (Corollary 1 gives the admissible
     range) and n1 ∈ {1..n−1}, solve Theorem 3 for each, keep the cheapest
     feasible plan."""
+    ensure_optimizable(dist)  # raise the named error, not "no feasible plan"
     J_min = conv.phi_inverse(prob, eps, 1.0 / n)          # all workers active
     if J_range is None:
         J_hi = max(J_min + 1, int(theta / max(rt.expected(n), 1e-9)))

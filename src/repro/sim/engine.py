@@ -150,28 +150,27 @@ class PriceSpec:
         resolution of ``TracePrices(trace, step=step)``. ``period`` is the
         wrap length (default: one step past the last timestamp, i.e.
         ``len(trace) * step`` for uniform traces, matching the legacy
-        ``int(t/step) % len`` modulo)."""
-        trace = np.asarray(trace, np.float32)
-        if times is None:
-            times = np.float32(step) * np.arange(len(trace), dtype=np.float32)
-            if period is None:
-                period = float(step) * len(trace)
-        times = np.asarray(times, np.float32)
-        if times.shape != trace.shape:
-            raise ValueError(f"{len(times)} timestamps for {len(trace)} "
-                             "trace entries")
-        if times[0] != 0.0 or np.any(np.diff(times) <= 0):
-            raise ValueError("trace timestamps must ascend strictly from 0, "
-                             f"got {times}")
-        if period is None:
-            last_gap = times[-1] - times[-2] if len(times) > 1 else 1.0
-            period = float(times[-1] + last_gap)
-        if period <= float(times[-1]):
-            raise ValueError(f"period {period} must exceed the last "
-                             f"timestamp {times[-1]}")
+        ``int(t/step) % len`` modulo). Defaulting and validation are shared
+        with every other trace consumer via ``sim.traces.PriceTrace``."""
+        from repro.sim.traces import PriceTrace
+        if isinstance(trace, PriceTrace):
+            pt = trace
+        else:
+            trace = np.asarray(trace, np.float32)
+            if times is None:
+                # default timestamps in f32 arithmetic, as always — the
+                # fig4 trace-parity pins are ULP-sensitive
+                times = np.float32(step) * np.arange(len(trace),
+                                                     dtype=np.float32)
+                if period is None:
+                    period = float(step) * len(trace)
+            pt = PriceTrace.from_arrays(trace, times=np.asarray(times, float),
+                                        step=step, period=period)
+        trace = np.asarray(pt.values, np.float32)
         return cls(kind=PRICE_TRACE, lo=float(trace.min()),
-                   hi=float(trace.max()), trace=trace, times=times,
-                   period=float(period))
+                   hi=float(trace.max()), trace=trace,
+                   times=np.asarray(pt.times, np.float32),
+                   period=float(pt.period))
 
     @classmethod
     def from_trace_ticks(cls, trace: np.ndarray) -> "PriceSpec":
@@ -226,6 +225,11 @@ class Scenario:
     bid_table: Optional[np.ndarray] = None
     bucket_starts: Optional[np.ndarray] = None
     replan_at: Optional[int] = None
+    J_target: Optional[int] = None  # stop after this many iterations even
+    #                                 though the plan arrays are wider — lets
+    #                                 replanners keep table shapes constant
+    #                                 (no recompile) while shrinking the
+    #                                 remaining-work target
     n_fleet: Optional[int] = None  # preemptible: mask width override (the
     #                                job's worker count when the schedule
     #                                provisions fewer than n_workers)
@@ -272,6 +276,11 @@ class Scenario:
                     "a multi-bucket bid_table needs replan_at (the "
                     "iteration at which the engine latches the bucket) — "
                     "without it only bucket 0 would ever be used")
+        if self.J_target is not None:
+            if not 1 <= int(self.J_target) <= self.plan_width:
+                raise ValueError(
+                    f"J_target={self.J_target} must lie in [1, "
+                    f"{self.plan_width}] (the plan width)")
 
     @property
     def mode(self) -> int:
@@ -282,10 +291,17 @@ class Scenario:
         return 1 if self.bid_table is None else int(self.bid_table.shape[0])
 
     @property
-    def J(self) -> int:
+    def plan_width(self) -> int:
+        """Rows in the plan arrays (≥ J when J_target overrides)."""
         if self.bid_table is not None:
             return int(self.bid_table.shape[1])
         return int(np.shape(self.worker_schedule)[0])
+
+    @property
+    def J(self) -> int:
+        if self.J_target is not None:
+            return int(self.J_target)
+        return self.plan_width
 
     @property
     def n_workers(self) -> int:
@@ -355,7 +371,7 @@ def stack_scenarios(scenarios: Sequence[Scenario]) -> ScenarioBatch:
     """
     S = len(scenarios)
     b_max = max(s.n_buckets for s in scenarios)
-    j_max = max(s.J for s in scenarios)
+    j_max = max(s.plan_width for s in scenarios)
     n_max = max(s.n_workers for s in scenarios)
     l_tr = max([len(s.price.trace) for s in scenarios
                 if s.price.trace is not None] or [1])

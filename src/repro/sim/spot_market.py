@@ -15,6 +15,7 @@ import numpy as np
 
 from repro.core.cost_model import EmpiricalPrice, PriceDist
 from repro.sim.market_core import spot_active_mask
+from repro.sim.traces import PriceTrace
 
 
 class PriceProcess:
@@ -71,14 +72,19 @@ class TracePrices(PriceProcess):
     trace: np.ndarray
     step: float = 1.0              # trace resolution in time units
 
+    def __post_init__(self):
+        # one shared representation (validation + lookup) for every trace
+        # consumer — see sim.traces
+        self._trace = PriceTrace.regular(np.asarray(self.trace),
+                                         step=self.step)
+
     def price(self, t: float) -> float:
-        idx = int(t / self.step) % len(self.trace)
-        return float(self.trace[idx])
+        return self._trace.price_at(t)
 
     def empirical_dist(self) -> EmpiricalPrice:
         """The F̂ the bidding optimizer sees (fit on history, as a user
         would)."""
-        return EmpiricalPrice(samples=self.trace)
+        return self._trace.empirical()
 
 
 @dataclasses.dataclass

@@ -98,3 +98,36 @@ def test_corollary1_joint_j_and_bids():
                                     RT)
     co = bidding.co_optimize_two_bids(PROB, eps, theta, n, dist, RT)
     assert co.expected_cost <= base.expected_cost + 1e-9
+
+
+# -- degenerate empirical distributions ------------------------------------
+
+
+def test_degenerate_empirical_dist_raises_named_error():
+    """A constant price trace (every sample identical — e.g. an on-demand
+    price pasted into a trace file) admits no bid trade-off; both two-bid
+    entry points must fail with `DegeneratePriceError`, not a confusing
+    'no feasible plan' from deep inside the sweep."""
+    from repro.core.cost_model import EmpiricalPrice
+
+    flat = EmpiricalPrice(samples=np.full(32, 0.25))
+    eps, theta, n = 0.5, 500.0, 8
+    J = conv.phi_inverse(PROB, eps, 1.0 / n) + 10
+    with pytest.raises(bidding.DegeneratePriceError, match="zero width"):
+        bidding.optimal_two_bids(PROB, eps, theta, 2, n, J, flat, RT)
+    with pytest.raises(bidding.DegeneratePriceError):
+        bidding.co_optimize_two_bids(PROB, eps, theta, n, flat, RT)
+    # DegeneratePriceError subclasses ValueError, so existing callers that
+    # degrade to a fallback plan on ValueError keep working unchanged.
+    assert issubclass(bidding.DegeneratePriceError, ValueError)
+
+
+def test_near_degenerate_and_nonfinite_support_rejected():
+    from repro.core.cost_model import EmpiricalPrice
+
+    # width below tolerance: still degenerate
+    squeezed = EmpiricalPrice(samples=np.full(16, 0.25) + 1e-13)
+    with pytest.raises(bidding.DegeneratePriceError):
+        bidding.ensure_optimizable(squeezed)
+    # a healthy distribution passes through untouched
+    bidding.ensure_optimizable(UniformPrice(0.2, 1.0))

@@ -1,0 +1,110 @@
+"""`service.estimator` — online posterior convergence and update
+equivalence properties. All NumPy, no jax: these run in milliseconds."""
+import numpy as np
+import pytest
+
+from repro.service.estimator import OnlineEstimator
+from repro.sim.spot_market import synthetic_history
+
+pytestmark = pytest.mark.serve
+
+
+def _feed(est, prices, chunk):
+    for k in range(0, len(prices), chunk):
+        est.update(prices[k:k + chunk])
+
+
+def test_price_quantiles_converge_to_source_distribution():
+    """After streaming a full synthetic history, the posterior quantiles
+    match the oracle quantiles of the very same data (the empirical
+    posterior is exact once the window holds everything)."""
+    cols = [synthetic_history(hours=64, seed=s) for s in (0, 1)]
+    T = min(len(c) for c in cols)
+    prices = np.stack([c[:T] for c in cols], axis=1)
+    est = OnlineEstimator(n_markets=2, window=2 * T)
+    _feed(est, prices, chunk=37)
+    for u in (0.1, 0.5, 0.9):
+        np.testing.assert_allclose(
+            est.quantile(u), np.quantile(prices, u, axis=0), rtol=1e-12)
+    grid = est.sample_grid(64)
+    assert grid.shape == (2, 64)
+    assert np.all(np.diff(grid, axis=1) >= 0)       # sorted per market
+
+
+def test_batched_update_equals_sequential_updates():
+    """One update(T, M) call and T single-tick updates leave bit-identical
+    posterior state — the vectorized ring write is exact."""
+    rng = np.random.default_rng(3)
+    prices = rng.uniform(0.05, 0.4, size=(97, 3))
+    pre = rng.uniform(size=prices.shape) < 0.1
+    batched = OnlineEstimator(n_markets=3, window=64)
+    batched.update(prices, pre)
+    seq = OnlineEstimator(n_markets=3, window=64)
+    for k in range(len(prices)):
+        seq.update(prices[k], pre[k])
+    np.testing.assert_array_equal(batched.prices(), seq.prices())
+    np.testing.assert_array_equal(batched.pre_a, seq.pre_a)
+    np.testing.assert_array_equal(batched.pre_b, seq.pre_b)
+    assert batched.n_samples == seq.n_samples == 64  # window saturated
+
+
+def test_ring_window_retains_only_recent_history():
+    """With a window of W, quantiles reflect the last W ticks only — a
+    regime shift ages out of the posterior."""
+    est = OnlineEstimator(n_markets=1, window=50)
+    est.update(np.full((200, 1), 0.1))      # old regime
+    est.update(np.full((50, 1), 0.9))       # new regime fills the window
+    assert est.n_samples == 50
+    assert float(est.quantile(0.5)[0]) == 0.9
+
+
+def test_preemption_posterior_converges():
+    rng = np.random.default_rng(7)
+    q_true = np.array([0.05, 0.3])
+    est = OnlineEstimator(n_markets=2)
+    T = 4000
+    prices = rng.uniform(0.1, 0.2, size=(T, 2))
+    pre = rng.uniform(size=(T, 2)) < q_true
+    est.update(prices, pre)
+    np.testing.assert_allclose(est.preempt_mean, q_true, atol=0.02)
+
+
+def test_rate_posterior_converges_under_true_model():
+    """Durations drawn from the true §III model (Δ plus the max of y
+    exp(λ) stage times) drive the Gamma posterior mean to λ."""
+    rng = np.random.default_rng(11)
+    lam_true, delta, n = 2.0, 0.05, 4
+    est = OnlineEstimator(n_markets=2, delta=delta)
+    for _ in range(40):
+        ys = rng.integers(1, n + 1, size=128)
+        durs = delta + np.array(
+            [rng.exponential(1.0 / lam_true, size=y).max() for y in ys])
+        markets = rng.integers(0, 2, size=128)
+        est.observe_durations(markets, durs, ys)
+    np.testing.assert_allclose(est.rate_mean, lam_true, rtol=0.1)
+    rt = est.runtime_model(0)
+    assert rt.kind == "exp" and rt.delta == delta
+
+
+def test_observe_durations_drops_junk_and_bincounts_repeats():
+    est = OnlineEstimator(n_markets=3)
+    a0, b0 = est.rate_a.copy(), est.rate_b.copy()
+    est.observe_durations([0, 0, 2, 1], [1.0, np.nan, -1.0, 0.5],
+                          [2, 2, 1, 4])
+    # only markets 0 and 1 saw a valid sample; market 2's was negative
+    np.testing.assert_array_equal(est.rate_a - a0, [1.0, 1.0, 0.0])
+    assert est.rate_b[2] == b0[2]
+    est.observe_durations([1, 1, 1], [0.6, 0.7, 0.8], [1, 1, 1])
+    assert est.rate_a[1] - a0[1] == 4.0     # repeats accumulate
+
+
+def test_summary_and_not_ready_guard():
+    est = OnlineEstimator(n_markets=1)
+    assert not est.ready
+    with pytest.raises(ValueError, match="no price observations"):
+        est.quantile(0.5)
+    s = est.summary(0)
+    assert s["n_samples"] == 0 and s["price_q50"] is None
+    est.update(np.array([[0.2]]))
+    s = est.summary(0)
+    assert s["price_q50"] == 0.2 and 0.0 < s["preempt_mean"] < 1.0

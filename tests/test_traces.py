@@ -1,0 +1,188 @@
+"""`sim.traces` — the canonical trace representation every consumer
+shares (legacy `TracePrices`, engine `PriceSpec.from_trace`, the service
+feed): construction/validation contract, loader formats, and bit-exact
+parity with the legacy inline lookups it replaced."""
+import numpy as np
+import pytest
+
+from repro.sim import engine
+from repro.sim.spot_market import TracePrices, synthetic_history
+from repro.sim.traces import (
+    PriceTrace,
+    TraceFormatError,
+    load_trace,
+    load_traces,
+    save_trace,
+)
+
+
+# -- construction & validation ---------------------------------------------
+
+
+def test_regular_defaults_match_legacy_modulo():
+    tr = PriceTrace.regular([0.1, 0.2, 0.3], step=0.5)
+    assert tr.step == 0.5 and tr.period == 1.5 and len(tr) == 3
+    np.testing.assert_allclose(tr.times, [0.0, 0.5, 1.0])
+
+
+def test_from_arrays_explicit_times_extrapolates_last_gap():
+    tr = PriceTrace.from_arrays([1.0, 2.0, 3.0], times=[0.0, 1.0, 3.0])
+    assert tr.period == 5.0          # last gap (2.0) past the last stamp
+    assert tr.step is None           # irregular spacing
+
+
+@pytest.mark.parametrize("kwargs,match", [
+    (dict(values=[], ), "non-empty"),
+    (dict(values=[[1.0, 2.0]]), "non-empty 1-D"),
+    (dict(values=[1.0, np.nan]), "non-finite"),
+])
+def test_bad_values_rejected(kwargs, match):
+    with pytest.raises(TraceFormatError, match=match):
+        PriceTrace.regular(**kwargs)
+
+
+def test_bad_timestamps_rejected():
+    with pytest.raises(TraceFormatError, match="ascend strictly from 0"):
+        PriceTrace.from_arrays([1.0, 2.0], times=[0.5, 1.0])
+    with pytest.raises(TraceFormatError, match="ascend strictly"):
+        PriceTrace.from_arrays([1.0, 2.0, 3.0], times=[0.0, 2.0, 2.0])
+    with pytest.raises(TraceFormatError, match="timestamps for"):
+        PriceTrace.from_arrays([1.0, 2.0, 3.0], times=[0.0, 1.0])
+    with pytest.raises(TraceFormatError, match="period"):
+        PriceTrace.from_arrays([1.0, 2.0], times=[0.0, 1.0], period=0.5)
+
+
+# -- lookup parity ----------------------------------------------------------
+
+
+def test_uniform_lookup_is_bitexact_with_legacy_traceprices():
+    """`TracePrices.price` now delegates to PriceTrace; the `int(t/step)
+    % len` fast path must reproduce the legacy arithmetic exactly,
+    including the wrap and awkward step ratios."""
+    trace = synthetic_history(hours=2, seed=1)
+    step = 1.0 / 12.0
+    proc = TracePrices(trace=trace, step=step)
+    for t in [0.0, 0.04, step, 2.5 * step, 7.3, len(trace) * step + 0.2,
+              10 * len(trace) * step]:
+        assert proc.price(t) == float(
+            trace[int(t / step) % len(trace)]), t
+
+
+def test_irregular_lookup_matches_uniform_on_same_grid():
+    """searchsorted (irregular) and the modulo fast path agree whenever
+    the timestamps happen to be uniform."""
+    values = np.asarray([0.3, 0.1, 0.4, 0.15])
+    uni = PriceTrace.regular(values, step=2.0)
+    irr = PriceTrace(values=values, times=np.array([0.0, 2.0, 4.0, 6.0]),
+                     period=8.0)  # step=None -> searchsorted path
+    for t in np.linspace(0.0, 24.0, 97):
+        assert uni.price_at(t) == irr.price_at(t), t
+
+
+def test_price_spec_from_trace_accepts_price_trace():
+    """Passing a PriceTrace and passing the raw array build equivalent
+    specs — prices bit-equal, timestamps within f32 ULP (the raw-array
+    path keeps the legacy f32 timestamp arithmetic for fig4 parity; the
+    PriceTrace path computes them in f64)."""
+    trace = synthetic_history(hours=1, seed=3)
+    via_array = engine.PriceSpec.from_trace(trace, step=0.05)
+    via_trace = engine.PriceSpec.from_trace(
+        PriceTrace.regular(np.asarray(trace, np.float32), step=0.05))
+    np.testing.assert_array_equal(via_array.trace, via_trace.trace)
+    np.testing.assert_allclose(via_array.times, via_trace.times, rtol=1e-6)
+    assert via_array.period == via_trace.period
+    assert (via_array.lo, via_array.hi) == (via_trace.lo, via_trace.hi)
+
+
+def test_resample_and_empirical():
+    tr = PriceTrace.regular([0.2, 0.4], step=1.0)
+    np.testing.assert_allclose(tr.resample(0.5, 5), [0.2, 0.2, 0.4, 0.4,
+                                                     0.2])
+    emp = tr.empirical()
+    assert emp.lo == tr.lo == 0.2 and emp.hi == tr.hi == 0.4
+
+
+# -- on-disk formats --------------------------------------------------------
+
+
+def test_load_npy_and_npz(tmp_path):
+    vals = np.array([0.11, 0.13, 0.12])
+    p_npy = tmp_path / "t.npy"
+    np.save(p_npy, vals)
+    tr = load_trace(str(p_npy), step=0.5)
+    np.testing.assert_array_equal(tr.values, vals)
+    assert tr.step == 0.5
+
+    p_npz = tmp_path / "t.npz"
+    np.savez(p_npz, prices=vals, times=np.array([0.0, 1.0, 4.0]),
+             period=np.asarray(9.0))
+    tr = load_trace(str(p_npz))
+    np.testing.assert_array_equal(tr.times, [0.0, 1.0, 4.0])
+    assert tr.period == 9.0
+
+
+def test_load_csv_one_and_two_columns(tmp_path):
+    p1 = tmp_path / "one.csv"
+    p1.write_text("price  # header\n0.1\n0.2  # peak\n\n0.15\n")
+    tr = load_trace(str(p1), step=2.0)
+    np.testing.assert_array_equal(tr.values, [0.1, 0.2, 0.15])
+    assert tr.step == 2.0 and tr.period == 6.0
+
+    p2 = tmp_path / "two.txt"
+    p2.write_text("time,price\n0.0,0.1\n1.5,0.2\n4.0,0.3\n")
+    tr = load_trace(str(p2))
+    np.testing.assert_array_equal(tr.times, [0.0, 1.5, 4.0])
+    np.testing.assert_array_equal(tr.values, [0.1, 0.2, 0.3])
+
+    bad = tmp_path / "bad.csv"
+    bad.write_text("0.1\nwhoops\n")
+    with pytest.raises(TraceFormatError, match="non-numeric row"):
+        load_trace(str(bad))
+
+    ragged = tmp_path / "ragged.csv"
+    ragged.write_text("0.0,0.1\n0.2\n")
+    with pytest.raises(TraceFormatError, match="uniform"):
+        load_trace(str(ragged))
+
+
+def test_load_json_list_and_object(tmp_path):
+    p = tmp_path / "list.json"
+    p.write_text("[0.1, 0.2]")
+    np.testing.assert_array_equal(load_trace(str(p)).values, [0.1, 0.2])
+
+    p = tmp_path / "obj.json"
+    p.write_text('{"prices": [0.1, 0.2], "step": 3.0}')
+    tr = load_trace(str(p))
+    assert tr.step == 3.0 and tr.period == 6.0
+
+    p = tmp_path / "nokey.json"
+    p.write_text('{"bids": [0.1]}')
+    with pytest.raises(TraceFormatError, match="no price array"):
+        load_trace(str(p))
+
+
+def test_unknown_extension_rejected(tmp_path):
+    with pytest.raises(TraceFormatError, match="unknown trace format"):
+        load_trace(str(tmp_path / "t.parquet"))
+
+
+def test_save_load_roundtrip(tmp_path):
+    tr = PriceTrace.from_arrays([0.4, 0.2, 0.9], times=[0.0, 0.7, 2.0],
+                                period=3.5)
+    for name in ("rt.npz", "rt.json"):
+        path = str(tmp_path / name)
+        save_trace(path, tr)
+        back = load_trace(path)
+        np.testing.assert_allclose(back.values, tr.values)
+        np.testing.assert_allclose(back.times, tr.times)
+        assert back.period == tr.period
+    with pytest.raises(TraceFormatError, match="save_trace"):
+        save_trace(str(tmp_path / "rt.csv"), tr)
+
+
+def test_load_traces_batch(tmp_path):
+    for i in range(2):
+        np.save(tmp_path / f"m{i}.npy", np.array([0.1 + i, 0.2 + i]))
+    traces = load_traces([str(tmp_path / "m0.npy"),
+                          str(tmp_path / "m1.npy")], step=0.5)
+    assert [t.values[0] for t in traces] == [0.1, 1.1]
