@@ -21,6 +21,10 @@ and step-microbenchmarks. Prints ``name,us_per_call,derived`` CSV rows.
           and per-job regret vs hindsight / best static paper plan.
   multibid — K=1..5 bid levels (core.multibid.optimize_multibid) on the
           engine: expected vs simulated cost curve (beyond-paper §VII).
+  zoo  — the model zoo under preemption (trainer.train_zoo): tokens/sec
+          for a small real reduced-qwen2 config under elastic masking,
+          cost-vs-loss frontier across fixed-bid levels, the bf16
+          mixed-precision carry, and persistent-jit-cache warm start.
   chaos — recovery overhead of the self-healing supervisor: the same
           durable run unfailed vs under a seeded kill+corrupt fault plan
           (restarts, ticks lost, MTTR, wall overhead %).
@@ -903,6 +907,99 @@ def bench_serve():
                      f"{j['regret_vs_static_paper']}")
 
 
+def bench_zoo():
+    """Model zoo under preemption (trainer.train_zoo → zoo_program →
+    engine): a small REAL reduced-qwen2 config trained through the batched
+    engine under elastic masking.
+
+    Rows: tokens/sec under the mask schedule (completed iterations ×
+    global_batch × seq_len / steady-state wall); the cost-vs-loss frontier
+    across three fixed-bid levels (per-level final loss vs total spot
+    cost); the bf16 mixed-precision zoo carry on the same grid; and the
+    persistent-jit-cache warm start (cold compile vs re-trace + disk load
+    after `jax.clear_caches()`, both net of a steady-state run)."""
+    import tempfile
+
+    import jax
+
+    from repro.configs import ARCHS
+    from repro.configs.base import InputShape, JobConfig
+    from repro.launch.jitcache import enable_persistent_cache
+    from repro.sim import engine
+    from repro.train.trainer import train_zoo
+
+    # cache must be on BEFORE the first compile so the tokens/sec run
+    # doubles as the cold-start sample for the warm-start row
+    cache_dir = tempfile.mkdtemp(prefix="bench_zoo_jitcache_")
+    enable_persistent_cache(cache_dir)
+
+    J = 4 if SMOKE else 12
+    n_w = 4
+    n_seeds = _seeds()
+    n_ticks = _ticks(2 * J + 8)
+    cfg = ARCHS["qwen2-7b"].reduced().with_(
+        d_model=64, num_heads=2, num_kv_heads=1, d_ff=128,
+        vocab_size=256, head_dim=32)
+    job = JobConfig(model=cfg, shape=InputShape("zoo", 16, 4, "train"),
+                    n_workers=n_w, learning_rate=0.1)
+    levels = np.linspace(0.6, 1.0, 2 if SMOKE else 3)
+    scenarios = [engine.Scenario(
+        price=engine.PriceSpec.uniform(0.2, 1.0), alpha=job.learning_rate,
+        bid_schedule=np.tile(np.full(n_w, b, np.float32), (J, 1)),
+        rt_kind="exp", rt_lam=2.0, rt_delta=0.05, idle_step=0.5,
+        name=f"b{b:.2f}") for b in levels]
+    b_sz, s_len = job.shape.global_batch, job.shape.seq_len
+
+    t0 = time.perf_counter()
+    train_zoo(job, scenarios, seeds=n_seeds, n_ticks=n_ticks)
+    cold_s = time.perf_counter() - t0
+    res, us_zoo = _timed(lambda: train_zoo(
+        job, scenarios, seeds=n_seeds, n_ticks=n_ticks))
+    iters = float(np.nansum(res.iterations))
+    tokens = iters * b_sz * s_len
+    cells = len(scenarios) * n_seeds
+    emit("zoo_tokens_per_sec", us_zoo / cells,
+         f"grid={len(scenarios)}x{n_seeds};J={J};n_ticks={n_ticks};"
+         f"tokens_per_sec={tokens / (us_zoo / 1e6):.0f};"
+         f"completed={float(res.completed.mean()):.2f}")
+
+    # cost-vs-loss frontier: one row per bid level — lower bids buy fewer
+    # active workers (noisier steps, cheaper ticks), the paper's trade
+    for i, b in enumerate(levels):
+        loss_traj = res.losses[i]            # (R, J_max)
+        final_loss = _nanmean(loss_traj[:, -1] if np.isfinite(
+            loss_traj[:, -1]).any() else loss_traj)
+        emit(f"zoo_frontier_b{b:.2f}", 0.0,
+             f"final_loss={final_loss:.3f};"
+             f"total_cost={float(res.total_cost[i].mean()):.3f};"
+             f"iterations={float(res.iterations[i].mean()):.1f}")
+
+    # bf16 mixed-precision carry (bf16 params/activations, f32 masters)
+    # through the identical grid — the zoo adapter's second dtype mode
+    cfg16 = cfg.with_(dtype="bfloat16", param_dtype="bfloat16")
+    job16 = JobConfig(model=cfg16, shape=job.shape, n_workers=n_w,
+                      learning_rate=0.1)
+    res16, us16 = _timed(lambda: train_zoo(
+        job16, scenarios, seeds=n_seeds, n_ticks=n_ticks))
+    tokens16 = float(np.nansum(res16.iterations)) * b_sz * s_len
+    emit("zoo_bf16", us16 / cells,
+         f"tokens_per_sec={tokens16 / (us16 / 1e6):.0f};"
+         f"final_loss={_nanmean(res16.losses[..., -1]):.3f};"
+         f"vs_f32={us_zoo / us16:.2f}x")
+
+    # warm start from the persistent cache: drop the in-memory jit cache,
+    # re-trace the same program, let XLA's compile hit the disk cache
+    steady_s = us_zoo / 1e6
+    jax.clear_caches()
+    t0 = time.perf_counter()
+    train_zoo(job, scenarios, seeds=n_seeds, n_ticks=n_ticks)
+    warm_s = time.perf_counter() - t0
+    emit("zoo_jitcache_warm_start", warm_s * 1e6,
+         f"cold_compile_s={max(cold_s - steady_s, 0):.2f};"
+         f"warm_compile_s={max(warm_s - steady_s, 0):.2f};"
+         f"speedup={max(cold_s - steady_s, 1e-9) / max(warm_s - steady_s, 1e-9):.1f}x")
+
+
 def bench_chaos():
     """Recovery overhead of the supervised durable loop: one unfailed
     supervised run vs the same workload under a seeded fault plan (a
@@ -961,6 +1058,7 @@ BENCHES = {
     "sharded": bench_sharded,
     "serve": bench_serve,
     "multibid": bench_multibid,
+    "zoo": bench_zoo,
     "roofline": bench_roofline,
     "steps": bench_steps,
     "kernels": bench_kernels,

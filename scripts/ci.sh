@@ -1,7 +1,7 @@
 #!/usr/bin/env bash
 # Tier-1 CI: fast test suite + a 5-scenario engine smoke sweep.
 # Run from anywhere: scripts/ci.sh [--smoke-bench] [--devices N] [--chaos]
-#                                   [--serve-smoke]
+#                                   [--serve-smoke] [--zoo-smoke]
 #
 # --smoke-bench additionally runs every benchmark in --smoke mode (2-tick /
 # 2-seed budgets) so perf-path regressions — import errors, shape breaks,
@@ -21,6 +21,12 @@
 # --serve-smoke additionally runs the fast serve-marked tests (the
 # rolling-horizon bidding service: stream -> posterior -> batched replan)
 # plus the serve benchmark in --smoke mode.
+#
+# --zoo-smoke additionally runs the zoo-marked tests (the zoo<->engine
+# adapter: engine-vs-plain-loop parity, the weighted_mean convention at the
+# train-step denominator, bf16 checkpoint kill-and-resume) plus the zoo
+# benchmark in --smoke mode (tokens/sec under elastic masking, cost-vs-loss
+# frontier, persistent-jit-cache warm start).
 set -euo pipefail
 cd "$(dirname "$0")/.."
 export PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH}
@@ -29,11 +35,13 @@ SMOKE_BENCH=0
 DEVICES=0
 CHAOS=0
 SERVE=0
+ZOO=0
 while [ "$#" -gt 0 ]; do
   case "$1" in
     --smoke-bench) SMOKE_BENCH=1; shift ;;
     --chaos) CHAOS=1; shift ;;
     --serve-smoke) SERVE=1; shift ;;
+    --zoo-smoke) ZOO=1; shift ;;
     --devices)
       [ "$#" -ge 2 ] || { echo "--devices needs a count" >&2; exit 2; }
       DEVICES="$2"; shift 2 ;;
@@ -203,5 +211,13 @@ if [ "$SERVE" = 1 ]; then
 
   echo "== serve benchmark smoke (replayed feed, tiny budgets) =="
   python -m benchmarks.run --only serve --smoke
+fi
+
+if [ "$ZOO" = 1 ]; then
+  echo "== zoo tests (parity, weighted_mean convention, bf16 resume) =="
+  python -m pytest -q -m "zoo and not slow"
+
+  echo "== zoo benchmark smoke (real reduced config, tiny budgets) =="
+  python -m benchmarks.run --only zoo --smoke
 fi
 echo "CI OK"

@@ -8,9 +8,49 @@ same dataclass drives smoke-test reduction (``reduced()``) and the dry-run
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional, Tuple
+from typing import Any, Optional, Tuple
 
 import jax.numpy as jnp
+
+
+class DtypeError(ValueError):
+    """A config names a dtype that does not resolve to a JAX dtype.
+
+    Configs carry dtypes as *strings* ("bfloat16", "float32") so they stay
+    hashable/serializable; every consumer (model init, abstract params, the
+    train step, the zoo↔engine adapter) must resolve them through
+    `resolve_dtype` so a typo fails here with the offending value named —
+    not three layers deep inside jit with an opaque ``TypeError``."""
+
+
+#: accepted shorthand spellings for config dtype strings
+_DTYPE_ALIASES = {
+    "bf16": "bfloat16",
+    "fp16": "float16", "f16": "float16", "half": "float16",
+    "fp32": "float32", "f32": "float32",
+    "fp64": "float64", "f64": "float64",
+}
+
+
+def resolve_dtype(dtype: Any, *, where: str = "") -> jnp.dtype:
+    """Resolve a config-carried dtype (string name, numpy/jnp dtype, or
+    scalar type) to a concrete ``jnp.dtype``.
+
+    The single choke point for every place a ``ModelConfig`` dtype string
+    is consumed. Raises `DtypeError` naming the bad value (and, via
+    ``where``, the field it came from) instead of letting ``jnp.dtype``'s
+    bare ``TypeError`` surface deep inside a jitted trace."""
+    ctx = f" ({where})" if where else ""
+    if dtype is None:
+        raise DtypeError(f"dtype is None{ctx}: expected a dtype name such "
+                         "as 'bfloat16' or 'float32'")
+    if isinstance(dtype, str):
+        dtype = _DTYPE_ALIASES.get(dtype.strip().lower(), dtype.strip())
+    try:
+        return jnp.dtype(dtype)
+    except TypeError as e:
+        raise DtypeError(
+            f"unresolvable dtype {dtype!r}{ctx}: {e}") from e
 
 
 @dataclasses.dataclass(frozen=True)
@@ -110,6 +150,11 @@ class ModelConfig:
     max_seq_len: int = 524288
     dtype: str = "bfloat16"       # activation/compute dtype
     param_dtype: str = "bfloat16"
+    # route full-sequence self-attention through the Pallas flash kernel
+    # (kernels.ops.flash_mha). Off by default: on CPU-only hosts the kernel
+    # runs in interpret mode (orders of magnitude slower than the jnp core),
+    # so only accelerator runs / explicit kernel-parity tests flip it on.
+    use_flash_attention: bool = False
     source: str = ""              # citation from the assignment sheet
 
     @property
@@ -130,7 +175,11 @@ class ModelConfig:
         return dataclasses.replace(self, **kw)
 
     def activation_dtype(self):
-        return jnp.dtype(self.dtype)
+        return resolve_dtype(self.dtype, where=f"{self.name}.dtype")
+
+    def resolved_param_dtype(self):
+        return resolve_dtype(self.param_dtype,
+                             where=f"{self.name}.param_dtype")
 
     def reduced(self) -> "ModelConfig":
         """Reduced variant of the same family for CPU smoke tests:

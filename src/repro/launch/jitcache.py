@@ -1,0 +1,52 @@
+"""Shared persistent-jit-cache policy for every launch entry point.
+
+The engine's programs are big scans: a cold-start compile of the batched
+train program costs seconds to minutes, and it used to be paid per process
+— every supervisor restart, every `launch/train.py` invocation, every
+bidding-service window warm-up. jax's persistent compilation cache turns
+each re-trace of an identical program into a disk load; this module is the
+one place that policy lives so `launch/train.py`, `launch/bidserve.py`,
+and the supervisor's worker all behave the same (previously the supervisor
+carried its own inline copy).
+
+Call `enable_persistent_cache` BEFORE the first jit execution (it only
+configures `jax.config`, so importing jax first is fine). Run-scoped
+directories (`cache_dir_for_run`) keep a supervised run's cache inside its
+``run_dir``; the cross-run default lands under ``~/.cache`` (override with
+``REPRO_JIT_CACHE``).
+"""
+from __future__ import annotations
+
+import os
+from typing import Optional
+
+#: environment override for the cross-run default cache location
+ENV_VAR = "REPRO_JIT_CACHE"
+
+
+def default_cache_dir() -> str:
+    return os.environ.get(ENV_VAR) or os.path.join(
+        os.path.expanduser("~"), ".cache", "repro", "jax_cache")
+
+
+def cache_dir_for_run(run_dir: str) -> str:
+    """The per-run cache location (inside the run directory, so a run's
+    artifacts — spec, checkpoints, events, compiled programs — travel and
+    get cleaned up together)."""
+    return os.path.join(run_dir, "jax_cache")
+
+
+def enable_persistent_cache(cache_dir: Optional[str] = None,
+                            min_compile_secs: float = 0.0) -> str:
+    """Point jax's persistent compilation cache at ``cache_dir`` (created
+    on demand by jax) and compile-time-threshold ``min_compile_secs``
+    (0 caches everything — right for engine scans, whose every compile is
+    worth a disk hit). Returns the directory used. Idempotent; safe to
+    call from several entry points in one process."""
+    import jax
+
+    cache_dir = cache_dir or default_cache_dir()
+    jax.config.update("jax_compilation_cache_dir", cache_dir)
+    jax.config.update("jax_persistent_cache_min_compile_time_secs",
+                      float(min_compile_secs))
+    return cache_dir

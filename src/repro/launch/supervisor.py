@@ -173,9 +173,9 @@ def worker_main(run_dir: str) -> int:
     if spec.jit_cache:
         # restarts re-trace the same chunk programs; the persistent cache
         # turns each restart's compile into a disk load
-        jax.config.update("jax_compilation_cache_dir",
-                          os.path.join(run_dir, "jax_cache"))
-        jax.config.update("jax_persistent_cache_min_compile_time_secs", 0)
+        from repro.launch.jitcache import (cache_dir_for_run,
+                                           enable_persistent_cache)
+        enable_persistent_cache(cache_dir_for_run(run_dir))
 
     from repro.train import trainer
 
@@ -196,13 +196,18 @@ def worker_main(run_dir: str) -> int:
         injector.events = _JsonlEvents(os.path.join(run_dir, EVENTS_NAME))
 
     hooks = _CompositeHooks(_Heartbeat(run_dir), injector)
-    res = trainer.train_batched_durable(
-        job, scenarios, seeds,
+    kw = dict(
         checkpoint_path=os.path.join(run_dir, CKPT_DIRNAME),
         save_every=spec.save_every, n_ticks=spec.n_ticks,
         mesh=mesh, save_shards=spec.save_shards,
         async_save=spec.async_save, keep_last=spec.keep_last,
         strict_resume=False, nan_guard=True, hooks=hooks)
+    if spec.zoo:
+        # zoo↔engine adapter: same durable chunk loop, model program and
+        # carry swapped for the (possibly mixed-precision) zoo step
+        res = trainer.train_zoo(job, scenarios, seeds, **kw)
+    else:
+        res = trainer.train_batched_durable(job, scenarios, seeds, **kw)
 
     out = {"final_tick": spec.n_ticks,
            "mesh_devices": int(jax.device_count()) if mesh is not None

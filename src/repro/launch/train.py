@@ -70,7 +70,10 @@ def supervise(args) -> int:
                       seeds=args.seeds, n_ticks=args.n_ticks,
                       save_every=args.save_every,
                       keep_last=args.keep_last,
-                      mesh=args.mesh or 0, seed=args.seed)
+                      mesh=args.mesh or 0, seed=args.seed,
+                      reduce_depth=args.reduce_depth,
+                      param_dtype=args.param_dtype,
+                      zoo=args.zoo)
     os.makedirs(args.run_dir, exist_ok=True)
     spec.save(os.path.join(args.run_dir, sup_mod.SPEC_NAME))
     if args.fault_plan:
@@ -89,7 +92,27 @@ def supervise(args) -> int:
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", choices=sorted(ARCHS), default="qwen2-7b")
+    ap.add_argument("--config", default=None, metavar="NAME",
+                    help="alias for --arch accepting underscore spelling "
+                         "(qwen2_7b == qwen2-7b)")
     ap.add_argument("--shape", choices=sorted(SHAPES), default="train_4k")
+    ap.add_argument("--reduce-depth", type=int, default=None, metavar="N",
+                    help="run the FULL arch config (real widths/vocab) at "
+                         "N layers instead of the reduced smoke variant "
+                         "(--supervise workload spec)")
+    ap.add_argument("--param-dtype", default=None,
+                    help="override the model param/activation dtype (e.g. "
+                         "bfloat16 — implies the zoo mixed-precision "
+                         "program)")
+    ap.add_argument("--zoo", action="store_true",
+                    help="train through the zoo↔engine adapter "
+                         "(trainer.train_zoo: mixed-precision carries, "
+                         "bf16 checkpoints) in the supervised worker")
+    ap.add_argument("--jit-cache", nargs="?", const="", default=None,
+                    metavar="DIR",
+                    help="enable the persistent jit compilation cache at "
+                         "DIR (default: launch.jitcache.default_cache_dir)"
+                         " so repeat invocations skip cold-start compiles")
     ap.add_argument("--local", action="store_true",
                     help="reduced config + simulated market on this host")
     ap.add_argument("--strategy", default="optimal-two-bids",
@@ -148,6 +171,19 @@ def main():
     ap.add_argument("--devices", type=int, default=0,
                     help="force N host devices in the supervised worker")
     args = ap.parse_args()
+    if args.config:
+        # accept the underscore spelling of registry names
+        arch = args.config.replace("_", "-")
+        if arch not in ARCHS:
+            ap.error(f"--config {args.config!r} does not name a config "
+                     f"(known: {', '.join(sorted(ARCHS))})")
+        args.arch = arch
+    if args.param_dtype and args.param_dtype not in ("float32", "fp32",
+                                                     "f32"):
+        args.zoo = True           # mixed precision needs the zoo carry
+    if args.jit_cache is not None:
+        from repro.launch.jitcache import enable_persistent_cache
+        enable_persistent_cache(args.jit_cache or None)
     if args.supervise:
         if args.run_dir is None:
             ap.error("--supervise requires --run-dir")
@@ -170,7 +206,13 @@ def main():
                          default=str, indent=1))
         return
 
-    cfg = get_config(args.arch).reduced()
+    if args.reduce_depth:
+        cfg = get_config(args.arch).with_(num_layers=args.reduce_depth)
+    else:
+        cfg = get_config(args.arch).reduced()
+    if args.param_dtype:
+        cfg = cfg.with_(dtype=args.param_dtype,
+                        param_dtype=args.param_dtype)
     shape = InputShape("local", seq_len=args.seq, global_batch=args.batch,
                        kind="train")
     job = JobConfig(model=cfg, shape=shape, n_workers=args.workers)

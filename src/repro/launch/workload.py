@@ -32,10 +32,22 @@ class WorkerSpec:
     shards the scenario axis over ``min(mesh, jax.device_count())``
     devices (0/1 = plain vmapped path) — the worker clamps to whatever
     devices the restarted process actually sees, which is how supervised
-    runs degrade 8→4→1."""
+    runs degrade 8→4→1.
+
+    Real-model workloads: ``reduce_depth=N`` starts from the arch's FULL
+    config (real widths/vocab) at N layers instead of the CPU-smoke
+    ``reduced()`` variant; ``param_dtype`` overrides the model's
+    param/activation dtype (e.g. "bfloat16"); ``zoo=True`` routes the
+    worker through `trainer.train_zoo` (the zoo↔engine adapter: mixed-
+    precision carries, bf16 checkpoints) instead of the plain reduced-
+    model program — set automatically by the launcher whenever a sub-f32
+    ``param_dtype`` is requested."""
 
     arch: str = "qwen2-7b"
     overrides: Dict[str, int] = dataclasses.field(default_factory=dict)
+    reduce_depth: Optional[int] = None
+    param_dtype: Optional[str] = None
+    zoo: bool = False
     n_workers: int = 4
     seq_len: int = 16
     global_batch: int = 8
@@ -101,7 +113,14 @@ def build_workload(spec: WorkerSpec):
     """Materialize ``(job, scenarios, seeds)`` from a spec — the arguments
     of `trainer.train_batched` / `train_batched_durable`. Deterministic:
     the same spec always builds the same workload."""
-    cfg = ARCHS[spec.arch].reduced()
+    if spec.reduce_depth:
+        # full real config at reduced depth — real widths, real vocab
+        cfg = ARCHS[spec.arch].with_(num_layers=spec.reduce_depth)
+    else:
+        cfg = ARCHS[spec.arch].reduced()
+    if spec.param_dtype:
+        cfg = cfg.with_(dtype=spec.param_dtype,
+                        param_dtype=spec.param_dtype)
     if spec.overrides:
         cfg = cfg.with_(**spec.overrides)
     job = JobConfig(model=cfg,

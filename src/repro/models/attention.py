@@ -161,8 +161,18 @@ def attention_block(p, cfg, x, qpos, *, kv_src=None, kv_pos=None, cache=None,
             new_cache = None
 
     is_cross = kv_src is not None or cross_cached
-    ctx = _attend(q, k, v, qpos, kpos, causal=causal and not is_cross,
-                  window=window if not is_cross else None)
+    if (cfg.use_flash_attention and cache is None and not is_cross
+            and kv_pos is None):
+        # full-sequence train/prefill path through the Pallas flash kernel
+        # (kernels.ops.flash_mha, GQA-native). The kernel derives positions
+        # from array offsets (query s at position s, keys 0..T-1), which is
+        # exactly this path's contiguous qpos — the cache/cross paths with
+        # scattered kpos stay on the jnp core.
+        from repro.kernels.ops import flash_mha
+        ctx = flash_mha(q, k, v, causal=causal, window=window)
+    else:
+        ctx = _attend(q, k, v, qpos, kpos, causal=causal and not is_cross,
+                      window=window if not is_cross else None)
     ctx = ctx.reshape(B, S, hq * dh)
     y = ctx @ p["wo"]
     return shard(y, "batch", "residual", None), new_cache

@@ -24,6 +24,8 @@ import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding
 from jax.sharding import PartitionSpec as P
 
+from repro.configs.base import resolve_dtype
+
 # --------------------------------------------------------------------------
 # Mesh / logical-axis context
 # --------------------------------------------------------------------------
@@ -171,10 +173,17 @@ def tree_map_specs(fn, defs):
 
 
 def init_params(defs, key: jax.Array, param_dtype=jnp.float32):
-    """Materialize real parameter arrays from a ParamSpec pytree."""
+    """Materialize real parameter arrays from a ParamSpec pytree.
+
+    ``param_dtype`` (and per-spec ``dtype`` overrides) may be config
+    strings ("bfloat16") or dtype objects — both resolve through
+    `configs.base.resolve_dtype`, so a bad string raises a named
+    `DtypeError` here rather than failing inside jit."""
+    param_dtype = resolve_dtype(param_dtype, where="init_params")
 
     def make(path, spec: ParamSpec):
-        dtype = spec.dtype or param_dtype
+        dtype = resolve_dtype(spec.dtype, where=f"ParamSpec{path}") \
+            if spec.dtype is not None else param_dtype
         if spec.init == "zeros":
             return jnp.zeros(spec.shape, dtype)
         if spec.init == "ones":
@@ -189,9 +198,15 @@ def init_params(defs, key: jax.Array, param_dtype=jnp.float32):
 
 
 def abstract_params(defs, param_dtype=jnp.bfloat16):
-    """ShapeDtypeStruct pytree (dry-run: no allocation)."""
+    """ShapeDtypeStruct pytree (dry-run: no allocation). ``param_dtype``
+    accepts config dtype strings (see `init_params`)."""
+    param_dtype = resolve_dtype(param_dtype, where="abstract_params")
     return tree_map_specs(
-        lambda s: jax.ShapeDtypeStruct(s.shape, s.dtype or param_dtype), defs)
+        lambda s: jax.ShapeDtypeStruct(
+            s.shape,
+            resolve_dtype(s.dtype, where="ParamSpec")
+            if s.dtype is not None else param_dtype),
+        defs)
 
 
 def param_pspecs(defs, mesh: Mesh, rules=None, fsdp: bool = True):

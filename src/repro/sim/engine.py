@@ -525,7 +525,16 @@ class ModelProgram:
 
     The engine gates the returned model on the iteration actually running
     (``jnp.where`` over every leaf), so the step need not handle the
-    all-preempted / finished cases — idle ticks are true no-ops.
+    all-preempted / finished cases — idle ticks are true no-ops. Gating is
+    *dtype-agnostic*: each gated leaf is cast back to the carry leaf's
+    dtype (`_gate_model`), so mixed-precision models — bf16 params beside
+    f32 optimizer masters, as `train.zoo_program` builds — cannot promote
+    the scan carry even if a step leaks a weak f32 or promoted leaf; and
+    ``metric`` is cast to f32 before it lands in the trajectory, so steps
+    may return a bf16 loss. ``data`` is an arbitrary pytree threaded
+    unbatched through both scan layouts (closed over in the vmapped path,
+    a replicated `PartitionSpec()` prefix in the sharded path) — per-
+    program batch streams ride along without engine changes.
 
     ``blocked=True`` selects the megabatched scan layout instead: the tick
     scan runs *outside* the grid vmap, the market logic is vmapped per
@@ -812,6 +821,17 @@ def _market_tick(sc: ScenarioBatch, base, seed, t, j, bucket0,
                       dt=dt, k_grad=k_grad)
 
 
+def _gate_model(running, stepped, old):
+    """Land the stepped model only on running ticks, per leaf, preserving
+    each carry leaf's dtype: a step that returns a promoted (or weak-f32)
+    leaf — easy to do in a mixed-precision update — would otherwise change
+    the scan carry's pytree dtypes mid-scan and fail to converge in
+    ``lax.scan``'s fixed-point check."""
+    return jax.tree.map(
+        lambda new, o: jnp.where(running, new.astype(o.dtype), o),
+        stepped, old)
+
+
 def _sim_one(sc: ScenarioBatch, state0: SimState, data, seed,
              program: ModelProgram, n_run: int, k_snap: int, tick0):
     """Simulate one scenario × one seed (vmapped twice by `simulate`),
@@ -837,9 +857,8 @@ def _sim_one(sc: ScenarioBatch, state0: SimState, data, seed,
         stepped, metric = program.step_fn(
             state.model, data, m.k_grad, m.mask.astype(jnp.float32),
             state.j, sc.alpha)
-        model = jax.tree.map(
-            lambda new, old: jnp.where(m.running, new, old), stepped,
-            state.model)
+        model = _gate_model(m.running, stepped, state.model)
+        metric = jnp.asarray(metric).astype(jnp.float32)
 
         t_new = state.t + m.dt
         cost_new = state.total_cost + m.cost_inc
@@ -913,6 +932,9 @@ def _sim_blocked(batch: ScenarioBatch, state0: SimState, data, seeds,
         model, metric = program.step_fn(
             state.model, data, m.k_grad, m.mask.astype(jnp.float32),
             state.j, alpha2, m.running)
+        # blocked steps own the model gating, but the trajectory contract
+        # is engine-owned either way: metrics land in f32 buffers
+        metric = jnp.asarray(metric).astype(jnp.float32)
 
         t_new = state.t + m.dt
         cost_new = state.total_cost + m.cost_inc

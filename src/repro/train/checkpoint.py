@@ -23,9 +23,15 @@ import zlib
 from typing import Any, Callable, List, Optional, Tuple
 
 import jax
+import jax.numpy as jnp
 import numpy as np
 
 SHARDED_FORMAT = "repro-sharded-checkpoint-v1"
+
+_BF16 = np.dtype(jnp.bfloat16)
+
+#: reserved keys in a flat .npz checkpoint (everything else is a leaf)
+_RESERVED_KEYS = frozenset({"__step__", "__bf16__"})
 
 #: Optional write interposer for fault injection (chaos tests): when set,
 #: `_atomic_write` calls ``_write_hook(tmp_path, write_fn)`` instead of
@@ -43,11 +49,24 @@ class CheckpointError(ValueError):
     partial restore."""
 
 
-def _flatten(tree) -> dict:
-    flat = {}
+def _flatten(tree) -> Tuple[dict, List[str]]:
+    """keystr → np.ndarray, plus the keys holding bfloat16 leaves.
+
+    ``np.savez`` writes ml_dtypes' bfloat16 as raw 2-byte void fields and
+    loads them back as ``|V2`` — the dtype is lost and the values are
+    unusable. bf16 leaves are therefore stored as their uint16 bit
+    patterns (a free reinterpreting view) and their keys recorded in a
+    side table (``__bf16__`` in flat files, ``bf16_keys`` in sharded
+    manifests) so restore can view them back losslessly."""
+    flat, bf16_keys = {}, []
     for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
-        flat[jax.tree_util.keystr(path)] = np.asarray(leaf)
-    return flat
+        key = jax.tree_util.keystr(path)
+        arr = np.asarray(leaf)
+        if arr.dtype == _BF16:
+            arr = arr.view(np.uint16)
+            bf16_keys.append(key)
+        flat[key] = arr
+    return flat, bf16_keys
 
 
 def _atomic_write(path: str, write_fn, suffix: str = ".tmp.npz") -> None:
@@ -71,8 +90,10 @@ def _atomic_write(path: str, write_fn, suffix: str = ".tmp.npz") -> None:
 
 
 def save(path: str, state: Any, step: int) -> None:
-    flat = _flatten(state)
+    flat, bf16_keys = _flatten(state)
     flat["__step__"] = np.asarray(step)
+    if bf16_keys:
+        flat["__bf16__"] = np.asarray(sorted(bf16_keys))
     _atomic_write(path, lambda tmp: np.savez(tmp, **flat))
 
 
@@ -93,19 +114,24 @@ def restore(path: str, like: Any) -> Tuple[Any, int]:
                 raise ValueError(f"{path} is not a repro checkpoint "
                                  "(missing __step__)")
             step = int(data["__step__"])
-            tree = _fill_template(data, set(data.files) - {"__step__"},
-                                  path, like)
+            bf16 = frozenset(data["__bf16__"].tolist()) \
+                if "__bf16__" in data else frozenset()
+            tree = _fill_template(data, set(data.files) - _RESERVED_KEYS,
+                                  path, like, bf16_keys=bf16)
     except (zipfile.BadZipFile, zlib.error, EOFError, OSError) as e:
         raise CheckpointError(
             f"{path} is not a readable checkpoint: {e}") from e
     return tree, step
 
 
-def _fill_template(data, have: set, path: str, like: Any) -> Any:
+def _fill_template(data, have: set, path: str, like: Any,
+                   bf16_keys: frozenset = frozenset()) -> Any:
     """Rebuild `like`'s structure from a mapping of keystr → array.
 
     `data` is anything indexable by key (an open NpzFile or a dict);
-    `have` is the set of leaf keys it holds. Raises ValueError naming
+    `have` is the set of leaf keys it holds; keys in ``bf16_keys`` hold
+    uint16 bit patterns of bfloat16 leaves (see `_flatten`) and are
+    viewed back before the template-dtype cast. Raises ValueError naming
     missing/extra keys on structure drift."""
     leaves_paths = jax.tree_util.tree_flatten_with_path(like)[0]
     treedef = jax.tree_util.tree_structure(like)
@@ -122,6 +148,8 @@ def _fill_template(data, have: set, path: str, like: Any) -> Any:
     leaves = []
     for (p, leaf), key in zip(leaves_paths, keys):
         arr = data[key]
+        if key in bf16_keys:
+            arr = np.asarray(arr).view(_BF16)
         if isinstance(leaf, (bool, int, float)):
             # Python-scalar template leaf (e.g. a step count or flag
             # carried in a config-bearing pytree) — restore the same
@@ -159,7 +187,7 @@ def save_sharded(path: str, state: Any, step: int, n_shards: int) -> None:
     with `restore_sharded` / `restore_any` on any mesh shape — the
     manifest records per-shard row counts, so reassembly is exact
     regardless of how many devices wrote or read it."""
-    flat = _flatten(state)
+    flat, bf16_keys = _flatten(state)
     if not flat:
         raise ValueError("cannot shard an empty pytree")
     rows = {v.shape[0] if v.ndim else None for v in flat.values()}
@@ -180,7 +208,8 @@ def save_sharded(path: str, state: Any, step: int, n_shards: int) -> None:
         shards.append({"file": os.path.basename(fname), "rows": hi - lo})
     manifest = {"format": SHARDED_FORMAT, "step": int(step),
                 "n_shards": n_shards, "rows": int(n_rows),
-                "keys": sorted(flat), "shards": shards}
+                "keys": sorted(flat), "shards": shards,
+                "bf16_keys": sorted(bf16_keys)}
     _atomic_write(path, lambda tmp: open(tmp, "w").write(
         json.dumps(manifest, indent=1)), suffix=".tmp.json")
     current = {s["file"] for s in shards}
@@ -253,7 +282,10 @@ def restore_sharded(path: str, like: Any) -> Tuple[Any, int]:
             f"checkpoint {path} reassembles to "
             f"{next(iter(full.values())).shape[0]} rows but the manifest "
             f"promised {manifest['rows']}")
-    tree = _fill_template(full, set(keys), path, like)
+    # bf16_keys absent from pre-mixed-precision manifests: default empty
+    tree = _fill_template(full, set(keys), path, like,
+                          bf16_keys=frozenset(manifest.get("bf16_keys",
+                                                           ())))
     return tree, int(manifest["step"])
 
 

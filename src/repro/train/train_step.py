@@ -14,16 +14,16 @@ from repro.optim.sgd import constant_lr, get_optimizer
 from repro.train.loss import elastic_token_weights, next_token_loss
 
 
-def make_train_step(cfg: ModelConfig, job: JobConfig,
-                    lr_fn: Optional[Callable] = None, remat: str = "full"):
-    """Returns train_step(params, opt_state, batch, active_mask, step).
+def make_loss_grad(cfg: ModelConfig, job: JobConfig, remat: str = "full"):
+    """Returns grad_step(params, batch, active_mask) -> (grads, loss, aux).
 
-    batch: tokens (B,S), labels (B,S), optional label_mask (B,S), frames /
-    patches for encdec / vlm. active_mask: (n_workers,) float — the elastic
-    worker mask (Eq. (5) with y_j = Σ mask).
+    The loss/grad core shared by ``make_train_step`` (f32 training) and
+    ``train/zoo_program.make_zoo_program`` (mixed-precision engine path):
+    per-worker token weights from the elastic ``active_mask``, masked-mean
+    normalization with `core.elastic.weighted_mean`'s exact-zero convention
+    (Σw=0 → loss 0, grads 0; denominator ``where(Σw>0, Σw, 1)``), and
+    optional gradient accumulation over ``job.microbatch`` micro-slices.
     """
-    opt = get_optimizer(job.optimizer, job.momentum)
-    lr_fn = lr_fn or constant_lr(job.learning_rate)
     n_micro = max(job.microbatch, 1)
 
     def _losses(p, batch, active_mask, b):
@@ -45,14 +45,14 @@ def make_train_step(cfg: ModelConfig, job: JobConfig,
         nll_sum = ((lse - gold) * w.astype(jnp.float32)).sum()
         return nll_sum, w.astype(jnp.float32).sum(), aux
 
-    def train_step(params, opt_state, batch: Dict, active_mask, step):
+    def grad_step(params, batch: Dict, active_mask):
         tokens = batch["tokens"]
         b = tokens.shape[0]
 
         if n_micro == 1:
             def loss_fn(p):
                 nll_sum, w_sum, aux = _losses(p, batch, active_mask, b)
-                loss = nll_sum / jnp.maximum(w_sum, 1e-6)
+                loss = nll_sum / jnp.where(w_sum > 0, w_sum, 1.0)
                 if cfg.moe is not None:
                     loss = loss + cfg.moe.aux_loss_weight * aux
                 # exact 0 (value and grads, incl. the MoE router through
@@ -101,11 +101,32 @@ def make_train_step(cfg: ModelConfig, job: JobConfig,
                 (zeros, jnp.zeros((), jnp.float32),
                  jnp.zeros((), jnp.float32), jnp.zeros((), jnp.float32)),
                 (micro, mask_micro))
-            denom = jnp.maximum(w_sum, 1e-6)
+            # weighted_mean's exact-zero convention: at Σw=0 the nll/grad
+            # sums are identically 0, and denom 1 keeps them exactly 0
+            denom = jnp.where(w_sum > 0, w_sum, 1.0)
             grads = jax.tree.map(lambda g: g / denom, g_sum)
             aux = aux_sum / n_micro
             loss = jnp.where(w_sum > 0, nll_sum / denom, 0.0)
 
+        return grads, loss, aux
+
+    return grad_step
+
+
+def make_train_step(cfg: ModelConfig, job: JobConfig,
+                    lr_fn: Optional[Callable] = None, remat: str = "full"):
+    """Returns train_step(params, opt_state, batch, active_mask, step).
+
+    batch: tokens (B,S), labels (B,S), optional label_mask (B,S), frames /
+    patches for encdec / vlm. active_mask: (n_workers,) float — the elastic
+    worker mask (Eq. (5) with y_j = Σ mask).
+    """
+    opt = get_optimizer(job.optimizer, job.momentum)
+    lr_fn = lr_fn or constant_lr(job.learning_rate)
+    grad_step = make_loss_grad(cfg, job, remat)
+
+    def train_step(params, opt_state, batch: Dict, active_mask, step):
+        grads, loss, aux = grad_step(params, batch, active_mask)
         lr = lr_fn(step)
         new_params, new_opt = opt.update(grads, opt_state, params, lr)
         metrics = {
@@ -148,6 +169,6 @@ def init_train_state(cfg: ModelConfig, job: JobConfig, key):
     from repro.models.common import init_params
 
     defs = model_zoo.param_defs(cfg)
-    params = init_params(defs, key, jnp.dtype(cfg.param_dtype))
+    params = init_params(defs, key, cfg.resolved_param_dtype())
     opt = get_optimizer(job.optimizer, job.momentum)
     return params, opt.init(params)

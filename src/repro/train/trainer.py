@@ -352,7 +352,9 @@ def train_batched(job: JobConfig,
                   tick0: int = 0,
                   megabatch: bool = False,
                   use_fused_update: bool = False,
-                  mesh=None) -> engine.EngineResult:
+                  mesh=None,
+                  program=None,
+                  model0=None) -> engine.EngineResult:
     """Train a real model under every scenario × seed in one compiled call.
 
     Folds the elastic masked train step into the batched engine: the whole
@@ -386,6 +388,11 @@ def train_batched(job: JobConfig,
     back. ``use_fused_update`` additionally routes the elastic SGD apply
     through the fused Pallas kernel (`kernels.ops.fused_elastic_update`).
 
+    ``program`` / ``model0`` swap in a caller-built ModelProgram factory
+    (``n_batches -> ModelProgram``) and matching initial model carry —
+    the hook `train_zoo` uses to run full zoo configs (mixed-precision
+    carries included) through this exact machinery.
+
     ``mesh`` routes execution through `engine.simulate_sharded`: the
     scenario axis of the grid shards over the mesh's ``data`` axis and
     the seed axis over its ``replica`` axis (when present), each device
@@ -396,9 +403,11 @@ def train_batched(job: JobConfig,
     scenarios, program, data, n_ticks = _prepare_batched(
         job, scenarios, n_ticks=n_ticks, n_batches=n_batches,
         batch_fn=batch_fn, batch_seed=batch_seed, megabatch=megabatch,
-        use_fused_update=use_fused_update)
+        use_fused_update=use_fused_update, program=program)
     if init_state is not None:
         model0 = None
+    elif model0 is not None:
+        pass                     # caller-built carry (e.g. train_zoo)
     elif megabatch:
         model0 = megabatch_mod.init_megabatch_state(
             job.model, job, jax.random.PRNGKey(job.seed))
@@ -417,10 +426,16 @@ def train_batched(job: JobConfig,
 
 def _prepare_batched(job: JobConfig, scenarios, *, n_ticks, n_batches,
                      batch_fn, batch_seed, megabatch: bool = False,
-                     use_fused_update: bool = False):
+                     use_fused_update: bool = False, program=None):
     """Shared setup of the scan-native training paths (`train_batched` and
     `train_batched_durable` must stay bit-exact equivalents): stack +
-    fleet-width check, batch stream, program, tick-budget default."""
+    fleet-width check, batch stream, program, tick-budget default.
+
+    ``program`` overrides the default reduced-model train program with a
+    caller-built `engine.ModelProgram` factory — called with the resolved
+    ``n_batches`` so the program's batch indexing matches the stacked data
+    stream (this is how `train_zoo` plugs `zoo_program.make_zoo_program`
+    in). Pass a callable ``n_batches -> ModelProgram``."""
     if not isinstance(scenarios, engine.ScenarioBatch):
         scenarios = engine.stack_scenarios(scenarios)
     if scenarios.n_max != job.n_workers:
@@ -431,7 +446,9 @@ def _prepare_batched(job: JobConfig, scenarios, *, n_ticks, n_batches,
     j_max = scenarios.j_max
     n_batches = n_batches or j_max
     data = stack_batches(job, n_batches, seed=batch_seed, batch_fn=batch_fn)
-    if megabatch:
+    if program is not None:
+        program = program(n_batches)
+    elif megabatch:
         program = make_megabatch_train_program(job, n_batches,
                                                use_fused_update)
     else:
@@ -443,14 +460,18 @@ def batched_init_state(job: JobConfig,
                        scenarios: Union[engine.ScenarioBatch,
                                         Sequence[engine.Scenario]],
                        seeds: Union[int, Sequence[int]],
-                       megabatch: bool = False) -> engine.SimState:
+                       megabatch: bool = False,
+                       model0=None) -> engine.SimState:
     """The (S, R) initial carry a batched training run starts from — and
     therefore the *restore template* for `checkpoint.restore` (same model
-    init ``PRNGKey(job.seed)``, same trajectory shapes). ``megabatch``
-    must match the run being restored: the flat replica-blocked carry and
-    the (params, opt_state) tree are different pytrees."""
+    init ``PRNGKey(job.seed)``, same trajectory shapes). ``megabatch`` /
+    ``model0`` must match the run being restored: the flat replica-blocked
+    carry, the (params, opt_state) tree, and a zoo mixed-precision carry
+    are all different pytrees."""
     n_seeds = int(seeds) if np.isscalar(seeds) else len(seeds)
-    if megabatch:
+    if model0 is not None:
+        pass
+    elif megabatch:
         model0 = megabatch_mod.init_megabatch_state(
             job.model, job, jax.random.PRNGKey(job.seed))
     else:
@@ -490,19 +511,22 @@ def restore_batched(path: str, job: JobConfig,
                     scenarios: Union[engine.ScenarioBatch,
                                      Sequence[engine.Scenario]],
                     seeds: Union[int, Sequence[int]],
-                    megabatch: bool = False):
+                    megabatch: bool = False,
+                    model0=None):
     """Load a `save_batched` checkpoint back into a batched carry. Returns
     ``(state, tick)`` for ``train_batched(init_state=state, tick0=tick)``;
     raises a key-naming ValueError if the job/scenario grid drifted from
     the one that was checkpointed. Pass ``megabatch=True`` for checkpoints
-    written by a megabatched run (flat replica-blocked carry).
+    written by a megabatched run (flat replica-blocked carry), or
+    ``model0`` for a caller-built carry (zoo runs — see `resume_zoo`).
 
     Both checkpoint formats are accepted (flat .npz or sharded manifest,
     sniffed by `checkpoint.restore_any`), and neither records a mesh: a
     grid saved from an 8-device run resumes on 4 devices, 1 device, or
     the plain vmapped path bit-exactly — re-sharding is just
     ``train_batched(init_state=..., mesh=...)`` on the new mesh."""
-    like = batched_init_state(job, scenarios, seeds, megabatch=megabatch)
+    like = batched_init_state(job, scenarios, seeds, megabatch=megabatch,
+                              model0=model0)
     return ckpt_mod.restore_any(path, like)
 
 
@@ -511,9 +535,15 @@ def state_is_finite(state: engine.SimState) -> bool:
     model, plus the cost/clock accumulators, is finite. (Trajectory
     buffers are excluded — their not-yet-run entries are NaN by design.)"""
     for leaf in jax.tree.leaves(state.model):
+        # jnp.issubdtype, not np: ml_dtypes' bfloat16 is NOT a np.floating
+        # subtype, so the numpy predicate would silently skip exactly the
+        # mixed-precision leaves this guard exists to check
+        if not jnp.issubdtype(jnp.asarray(leaf).dtype, jnp.floating):
+            continue
         arr = np.asarray(leaf)
-        if np.issubdtype(arr.dtype, np.floating) and \
-                not np.isfinite(arr).all():
+        if arr.dtype == np.dtype(jnp.bfloat16):
+            arr = arr.astype(np.float32)
+        if not np.isfinite(arr).all():
             return False
     return bool(np.isfinite(np.asarray(state.total_cost)).all()
                 and np.isfinite(np.asarray(state.t)).all())
@@ -537,7 +567,9 @@ def train_batched_durable(job: JobConfig,
                           strict_resume: bool = True,
                           nan_guard: bool = False,
                           max_rollbacks: int = 3,
-                          hooks=None) -> engine.EngineResult:
+                          hooks=None,
+                          program=None,
+                          model0=None) -> engine.EngineResult:
     """Preemption-*durable* batched training: the scan executes in
     ``save_every``-tick jitted chunks on the host, persisting the full
     batched carry to ``checkpoint_path`` after every chunk — so a process
@@ -589,7 +621,7 @@ def train_batched_durable(job: JobConfig,
         raise ValueError(f"keep_last={keep_last} must be ≥ 1")
     scenarios, program, data, n_ticks = _prepare_batched(
         job, scenarios, n_ticks=n_ticks, n_batches=n_batches,
-        batch_fn=batch_fn, batch_seed=batch_seed)
+        batch_fn=batch_fn, batch_seed=batch_seed, program=program)
 
     def hook(name, *args):
         fn = getattr(hooks, name, None) if hooks is not None else None
@@ -598,15 +630,16 @@ def train_batched_durable(job: JobConfig,
     step_mode = keep_last is not None
     resumed_from = None
     if resume and step_mode and ckpt_mod.list_steps(checkpoint_path):
-        like = batched_init_state(job, scenarios, seeds)
+        like = batched_init_state(job, scenarios, seeds, model0=model0)
         state, tick, resumed_from = ckpt_mod.restore_newest(
             checkpoint_path, like, strict=strict_resume)
     elif resume and not step_mode and os.path.exists(checkpoint_path):
         state, tick = restore_batched(checkpoint_path, job, scenarios,
-                                      seeds)
+                                      seeds, model0=model0)
         resumed_from = checkpoint_path
     else:
-        state, tick = batched_init_state(job, scenarios, seeds), 0
+        state, tick = batched_init_state(job, scenarios, seeds,
+                                         model0=model0), 0
     if tick > n_ticks:
         raise ValueError(
             f"checkpoint {resumed_from} is at tick {tick}, beyond "
@@ -693,3 +726,66 @@ def train_batched_durable(job: JobConfig,
         if writer is not None:
             writer.close()
     return res
+
+
+def _zoo_setup(job: JobConfig, remat: str):
+    """(program factory, initial carry) for a zoo run — the two hooks that
+    turn the generic batched paths into full-zoo training."""
+    from repro.train import zoo_program as zoo_mod
+
+    cfg = job.model
+
+    def program(n_batches: int) -> engine.ModelProgram:
+        return zoo_mod.make_zoo_program(cfg, job, n_batches, remat)
+
+    model0 = zoo_mod.init_zoo_state(cfg, job, jax.random.PRNGKey(job.seed))
+    return program, model0
+
+
+def train_zoo(job: JobConfig,
+              scenarios: Union[engine.ScenarioBatch,
+                               Sequence[engine.Scenario]],
+              seeds: Union[int, Sequence[int]] = 8, *,
+              remat: str = "none",
+              checkpoint_path: Optional[str] = None,
+              save_every: Optional[int] = None,
+              **kw) -> engine.EngineResult:
+    """Train ``job.model`` — any zoo config, full or reduced, f32 or
+    mixed-precision — under every scenario × seed through the batched
+    engine.
+
+    A thin front over `train_batched` (and, when ``checkpoint_path`` +
+    ``save_every`` are given, over `train_batched_durable` — the same
+    durable chunk loop, step-directory GC, async writers, NaN guard and
+    chaos hooks all apply) with the model program swapped for
+    `zoo_program.make_zoo_program` and the initial carry for
+    `zoo_program.init_zoo_state`. Mixed-precision configs train with bf16
+    params/activations over f32 optimizer masters; checkpoints then carry
+    bf16 leaves (see `checkpoint`'s bit-view encoding) and resume
+    bit-consistently. Remaining keyword arguments pass through to the
+    underlying path (``n_ticks``, ``n_batches``, ``mesh``,
+    ``snapshot_every``, ``keep_last``, ``nan_guard`` ...)."""
+    program, model0 = _zoo_setup(job, remat)
+    if checkpoint_path is not None:
+        if not save_every:
+            raise ValueError(
+                "train_zoo(checkpoint_path=...) needs save_every ≥ 1")
+        return train_batched_durable(
+            job, scenarios, seeds, checkpoint_path=checkpoint_path,
+            save_every=save_every, program=program, model0=model0, **kw)
+    return train_batched(job, scenarios, seeds, program=program,
+                         model0=model0, **kw)
+
+
+def resume_zoo(path: str, job: JobConfig,
+               scenarios: Union[engine.ScenarioBatch,
+                                Sequence[engine.Scenario]],
+               seeds: Union[int, Sequence[int]],
+               remat: str = "none"):
+    """Load a zoo run's checkpoint back into its (possibly mixed-precision)
+    carry: ``(state, tick)`` for ``train_zoo(..., init_state=state,
+    tick0=tick)``. The restore template is rebuilt from the job exactly as
+    `train_zoo` built it, so structure drift is named, not silent."""
+    del remat                     # template depends only on the carry shape
+    _, model0 = _zoo_setup(job, "none")
+    return restore_batched(path, job, scenarios, seeds, model0=model0)

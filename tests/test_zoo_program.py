@@ -1,0 +1,305 @@
+"""The zoo ↔ engine adapter (train/zoo_program.py), pinned three ways.
+
+1. Parity: a real (tiny) transformer trained through the batched engine's
+   scan (`trainer.train_zoo` → `make_zoo_program`) must reproduce a
+   hand-rolled host loop over the same update rule under the same
+   deterministic mask schedule — pinned at float32-ulp tolerance in f32
+   (where the engine carry is literally `init_train_state`'s
+   ``(params, opt_state)``), and atol-pinned for the bf16 mixed-precision
+   carry.
+2. Convention: the train-step loss/grads follow
+   `core.elastic.weighted_mean`'s exact-zero convention — an all-preempted
+   step is exactly 0 in value AND gradient, and the normal-path loss IS
+   the weighted mean of per-token nll under the elastic token weights.
+3. Durability: a bf16 zoo run killed mid-scan and resumed through the
+   durable checkpoint path (`train_zoo(checkpoint_path=...)`) lands
+   bit-for-bit where the uninterrupted run lands — the uint16-view bf16
+   leaf round-trip in train/checkpoint.py included.
+"""
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ARCHS
+from repro.configs.base import DtypeError, InputShape, JobConfig, \
+    resolve_dtype
+from repro.core import elastic
+from repro.models import model_zoo
+from repro.sim import engine
+from repro.sim.market_core import spot_active_mask
+from repro.train.loss import elastic_token_weights
+from repro.train.train_step import init_train_state, make_loss_grad, \
+    make_train_step
+from repro.train.trainer import resume_zoo, stack_batches, train_zoo
+from repro.train.zoo_program import init_zoo_state, is_mixed_precision, \
+    make_zoo_step
+
+pytestmark = pytest.mark.zoo
+
+J = 8
+N_W = 4
+BIDS = np.asarray([0.9, 0.9, 0.5, 0.5], np.float32)
+# price per tick: 0.3 → all 4 active; 0.7 → the two 0.9-bidders; 0.95 →
+# nobody (idle tick, must be a true no-op); cycles so the schedule mixes
+# full, partial and preempted ticks
+TRACE = np.asarray([0.3, 0.7, 0.95, 0.45, 0.7, 0.3, 0.95, 0.6,
+                    0.3, 0.7, 0.45, 0.3, 0.7, 0.3, 0.45, 0.3], np.float32)
+N_TICKS = len(TRACE)
+
+
+def _tiny_cfg(**over):
+    cfg = ARCHS["qwen2-7b"].reduced().with_(
+        d_model=64, num_heads=2, num_kv_heads=1, d_ff=128, vocab_size=256,
+        head_dim=32)
+    return cfg.with_(**over) if over else cfg
+
+
+def _job(cfg, b=4, s=16):
+    return JobConfig(model=cfg, shape=InputShape("t", s, b, "train"),
+                     n_workers=N_W, learning_rate=0.1)
+
+
+def _trace_scenario():
+    """Deterministic everything: tick-replayed prices (seed 0 replays the
+    trace verbatim), det runtime — the mask schedule is a pure function
+    of (trace, bids), so the host loop below knows it exactly."""
+    return engine.Scenario(
+        price=engine.PriceSpec.from_trace_ticks(TRACE), alpha=0.1,
+        bid_schedule=np.tile(BIDS, (J, 1)),
+        rt_kind="det", rt_const=1.0, idle_step=0.5, name="trace")
+
+
+def _hand_masks():
+    """The (running, mask) schedule the engine will realize on TRACE."""
+    sched = []
+    j = 0
+    for price in TRACE:
+        mask = spot_active_mask(BIDS, price).astype(np.float32)
+        running = bool(mask.sum() >= 1) and j < J
+        sched.append((running, mask))
+        j += int(running)
+    return sched
+
+
+def test_trace_schedule_mixes_full_partial_idle():
+    """The parity fixture actually exercises all three tick kinds."""
+    ys = [m.sum() for run, m in _hand_masks() if run]
+    idle = [1 for run, _ in _hand_masks() if not run]
+    assert 4.0 in ys and 2.0 in ys and idle
+
+
+def test_zoo_engine_matches_plain_loop_f32():
+    """f32 zoo carry through the engine scan == a hand-rolled
+    make_train_step loop under the same mask schedule, pinned at
+    float32-ulp tolerance (the engine's vmap batching refuses the exact
+    fusion order of the host loop, so last-ulp drift is the floor)."""
+    cfg = _tiny_cfg()
+    job = _job(cfg)
+    res = train_zoo(job, [_trace_scenario()], seeds=[0], n_ticks=N_TICKS,
+                    donate=False)
+
+    params, opt_state = init_train_state(cfg, job, jax.random.PRNGKey(0))
+    data = stack_batches(job, J, seed=0)
+    step = jax.jit(make_train_step(cfg, job, remat="none"))
+    losses = []
+    j = 0
+    for running, mask in _hand_masks():
+        if not running:
+            continue
+        batch = jax.tree.map(lambda x: np.asarray(x)[j % J], data)
+        params, opt_state, metrics = step(params, opt_state, batch,
+                                          jnp.asarray(mask),
+                                          jnp.asarray(j, jnp.int32))
+        losses.append(float(metrics["loss"]))
+        j += 1
+
+    assert int(res.iterations[0, 0]) == j == J
+    np.testing.assert_allclose(res.losses[0, 0, :j],
+                               np.asarray(losses, np.float32),
+                               rtol=1e-6, atol=1e-6)
+    eng_params = jax.tree.map(lambda x: np.asarray(x)[0, 0],
+                              res.final_model[0])
+    for a, b in zip(jax.tree.leaves(eng_params), jax.tree.leaves(params)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=1e-6, atol=1e-6)
+
+
+def test_zoo_engine_matches_plain_loop_bf16():
+    """bf16 mixed-precision carry: the engine run is pinned (small atol —
+    the only difference is vmap/scan batching of bf16 ops) against an
+    independent host loop over the same `make_zoo_step` update rule."""
+    cfg = _tiny_cfg(dtype="bfloat16", param_dtype="bfloat16")
+    assert is_mixed_precision(cfg)
+    job = _job(cfg)
+    res = train_zoo(job, [_trace_scenario()], seeds=[0], n_ticks=N_TICKS,
+                    donate=False)
+
+    model = init_zoo_state(cfg, job, jax.random.PRNGKey(0))
+    data = stack_batches(job, J, seed=0)
+    step = jax.jit(make_zoo_step(cfg, job))
+    losses = []
+    j = 0
+    for running, mask in _hand_masks():
+        if not running:
+            continue
+        batch = jax.tree.map(lambda x: np.asarray(x)[j % J], data)
+        model, loss = step(model, batch, jnp.asarray(mask),
+                           jnp.asarray(j, jnp.int32))
+        losses.append(float(loss))
+        j += 1
+
+    assert int(res.iterations[0, 0]) == j == J
+    np.testing.assert_allclose(res.losses[0, 0, :j],
+                               np.asarray(losses, np.float32),
+                               rtol=0, atol=1e-5)
+    assert jax.tree.leaves(model["params"])[0].dtype == jnp.bfloat16
+    assert jax.tree.leaves(model["master"])[0].dtype == jnp.float32
+    eng = jax.tree.map(lambda x: np.asarray(x)[0, 0],
+                       res.final_model["master"])
+    for a, b in zip(jax.tree.leaves(eng),
+                    jax.tree.leaves(model["master"])):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=0, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# the weighted_mean convention, pinned at the train-step denominator
+# ---------------------------------------------------------------------------
+
+
+def _one_batch(job):
+    return jax.tree.map(lambda x: np.asarray(x)[0],
+                        stack_batches(job, 1, seed=3))
+
+
+def test_all_preempted_step_is_exact_zero():
+    """Σw = 0: loss AND every gradient leaf are exactly 0 — the same
+    convention as `core.elastic.weighted_mean`, not an ε-scaled residue."""
+    cfg = _tiny_cfg()
+    job = _job(cfg)
+    params, _ = init_train_state(cfg, job, jax.random.PRNGKey(1))
+    grad_step = make_loss_grad(cfg, job, remat="none")
+    grads, loss, _ = grad_step(params, _one_batch(job),
+                               jnp.zeros((N_W,), jnp.float32))
+    assert float(loss) == 0.0
+    for g in jax.tree.leaves(grads):
+        assert float(jnp.abs(g).max()) == 0.0
+
+
+@pytest.mark.parametrize("mask", [(1, 1, 1, 1), (1, 1, 0, 0),
+                                  (0.5, 0.25, 0.0, 1.0)])
+def test_loss_is_weighted_mean_of_token_nll(mask):
+    """The train-step loss IS elastic.weighted_mean(per-token nll, elastic
+    token weights) — including fractional (importance-scaled) masks, where
+    an ε-clamped denominator would silently rescale."""
+    cfg = _tiny_cfg()
+    job = _job(cfg)
+    params, _ = init_train_state(cfg, job, jax.random.PRNGKey(1))
+    batch = _one_batch(job)
+    m = jnp.asarray(mask, jnp.float32)
+    _, loss, _ = make_loss_grad(cfg, job, remat="none")(params, batch, m)
+
+    logits, _ = model_zoo.forward(params, cfg, batch, remat="none")
+    lse = jax.nn.logsumexp(logits.astype(jnp.float32), axis=-1)
+    gold = jnp.take_along_axis(logits.astype(jnp.float32),
+                               batch["labels"][..., None], axis=-1)[..., 0]
+    b, s = batch["tokens"].shape
+    w = elastic_token_weights(m, b, s).astype(jnp.float32)
+    np.testing.assert_allclose(float(loss),
+                               float(elastic.weighted_mean(lse - gold, w)),
+                               rtol=0, atol=1e-6)
+
+
+def test_microbatch_path_shares_the_convention():
+    """Gradient accumulation normalizes by the same Σw-or-1 denominator:
+    microbatched and single-shot grads/loss agree, and the all-preempted
+    microbatch run is still exactly 0."""
+    import dataclasses
+
+    cfg = _tiny_cfg()
+    job1 = _job(cfg)
+    job = dataclasses.replace(job1, microbatch=2)
+    params, _ = init_train_state(cfg, job1, jax.random.PRNGKey(1))
+    batch = _one_batch(job1)
+    m = jnp.asarray([1, 0, 1, 1], jnp.float32)
+    g2, l2, _ = make_loss_grad(cfg, job, remat="none")(params, batch, m)
+    g1, l1, _ = make_loss_grad(cfg, job1, remat="none")(params, batch, m)
+    np.testing.assert_allclose(float(l2), float(l1), rtol=0, atol=1e-6)
+    for a, b in zip(jax.tree.leaves(g2), jax.tree.leaves(g1)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=0, atol=1e-5)
+    _, l0, _ = make_loss_grad(cfg, job, remat="none")(
+        params, batch, jnp.zeros((N_W,), jnp.float32))
+    assert float(l0) == 0.0
+
+
+def test_resolve_dtype_raises_named_error():
+    with pytest.raises(DtypeError, match="bfloat17"):
+        resolve_dtype("bfloat17", where="test")
+    with pytest.raises(DtypeError):
+        is_mixed_precision(_tiny_cfg(param_dtype="not-a-dtype"))
+
+
+# ---------------------------------------------------------------------------
+# durable bf16 checkpoints: kill, resume, land bit-exact
+# ---------------------------------------------------------------------------
+
+
+def _assert_results_bitexact(a, b):
+    np.testing.assert_array_equal(a.losses, b.losses)
+    np.testing.assert_array_equal(a.costs, b.costs)
+    np.testing.assert_array_equal(a.iterations, b.iterations)
+    np.testing.assert_array_equal(a.total_cost, b.total_cost)
+    for la, lb in zip(jax.tree.leaves(a.final_model),
+                      jax.tree.leaves(b.final_model)):
+        assert np.asarray(la).dtype == np.asarray(lb).dtype
+        np.testing.assert_array_equal(
+            np.asarray(jnp.asarray(la).astype(jnp.float32)),
+            np.asarray(jnp.asarray(lb).astype(jnp.float32)))
+
+
+def _uniform_grid():
+    return [engine.Scenario(
+        price=engine.PriceSpec.uniform(0.2, 1.0), alpha=0.1,
+        bid_schedule=np.tile(BIDS, (J, 1)), rt_kind="exp", rt_lam=2.0,
+        rt_delta=0.05, idle_step=0.5, name=f"g{i}") for i in range(2)]
+
+
+def test_zoo_bf16_kill_and_resume_is_bitexact(tmp_path):
+    """A bf16 zoo run driven through the durable path, killed after a
+    truncated tick budget, resumes from its .npz (bf16 leaves stored as
+    uint16 views) and finishes bit-identical to the uninterrupted run."""
+    cfg = _tiny_cfg(dtype="bfloat16", param_dtype="bfloat16")
+    job = _job(cfg)
+    scenarios, seeds, n_ticks = _uniform_grid(), [0, 1], 20
+
+    full = train_zoo(job, scenarios, seeds=seeds, n_ticks=n_ticks,
+                     donate=False)
+
+    # durable single pass lands where the plain call lands
+    path = str(tmp_path / "zoo.npz")
+    durable = train_zoo(job, scenarios, seeds=seeds, n_ticks=n_ticks,
+                        checkpoint_path=path, save_every=6)
+    _assert_results_bitexact(durable, full)
+
+    # "kill" after 8 ticks, then resume to the full budget
+    path2 = str(tmp_path / "killed.npz")
+    train_zoo(job, scenarios, seeds=seeds, n_ticks=8,
+              checkpoint_path=path2, save_every=4)
+    state, tick = resume_zoo(path2, job, scenarios, seeds)
+    assert tick == 8
+    # restored carry kept its mixed dtypes through the npz round-trip
+    assert jax.tree.leaves(state.model["params"])[0].dtype == jnp.bfloat16
+    assert jax.tree.leaves(state.model["master"])[0].dtype == jnp.float32
+    resumed = train_zoo(job, scenarios, seeds=seeds, n_ticks=n_ticks,
+                        checkpoint_path=path2, save_every=4)
+    _assert_results_bitexact(resumed, full)
+
+
+def test_train_zoo_requires_cadence_with_checkpoint():
+    cfg = _tiny_cfg()
+    with pytest.raises(ValueError, match="save_every"):
+        train_zoo(_job(cfg), _uniform_grid(), seeds=[0],
+                  checkpoint_path="/tmp/nope.npz")
